@@ -1,0 +1,69 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+artifacts in results/dryrun/. One row per (arch x shape) single-pod cell from
+the UNROLLED lowering (accurate HLO flops/bytes/collectives); the scanned
+cells are the pass/fail + memory record."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(suffix: str = "__unrolled") -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, f"*{suffix}.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_row(d: dict) -> str:
+    t = d["terms"]
+    return (f"| {d['arch']} | {d['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | {t['dominant']} | "
+            f"{t['useful_ratio']:.3f} | {t['roofline_fraction']:.3f} |")
+
+
+HEADER = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "dominant | useful ratio | roofline frac |\n"
+          "|---|---|---|---|---|---|---|---|")
+
+
+def render(suffix: str = "__unrolled") -> str:
+    cells = load_cells(suffix)
+    lines = [HEADER] + [fmt_row(d) for d in cells]
+    return "\n".join(lines)
+
+
+def render_dryrun_summary() -> str:
+    """Scanned-cell summary: per-cell compile status + memory + collectives."""
+    rows = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        if "unrolled" in p:
+            continue
+        d = json.load(open(p))
+        mem = d.get("memory_analysis", {})
+        args = mem.get("argument_size_in_bytes", 0)
+        temp = mem.get("temp_size_in_bytes", 0)
+        cc = d["collectives"]["count_by_kind"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | ok "
+            f"({d['compile_s']:.0f}s) | {args / 2**30:.2f} | {temp / 2**30:.2f} | "
+            f"{sum(cc.values())} ({'+'.join(f'{k}:{v}' for k, v in sorted(cc.items()))}) |")
+    header = ("| arch | shape | mesh | compile | args GiB/dev | temps GiB/dev | "
+              "collectives |\n|---|---|---|---|---|---|---|")
+    return "\n".join([header] + rows)
+
+
+def main():
+    print("== §Roofline (single-pod, unrolled lowering) ==")
+    print(render())
+    print()
+    print("== §Dry-run (scanned lowering, single+multi pod) ==")
+    print(render_dryrun_summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+  python -m benchmarks.run [--skip accuracy speed ...]
+
+  accuracy_rank   — Fig. 6 mean ranks + Tab. 3 pairwise wins
+  speed           — Tab. 2 train/inference seconds
+  engines_bench   — App. B.4 per-engine us/example
+  distributed_df  — §3.9 traffic scaling
+  roofline_report — assignment §Roofline/§Dry-run tables (from results/)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip", nargs="*", default=[])
+    args = ap.parse_args()
+
+    from benchmarks import accuracy_rank, distributed_df, engines_bench, speed
+
+    t_all = time.time()
+    if "speed" not in args.skip:
+        print("== speed (paper Tab. 2) ==", flush=True)
+        speed.run()
+    if "engines" not in args.skip:
+        print("== engines (paper App. B.4) ==", flush=True)
+        engines_bench.run()
+    if "distributed" not in args.skip:
+        print("== distributed DF traffic (paper §3.9) ==", flush=True)
+        distributed_df.run()
+    if "accuracy" not in args.skip:
+        print("== accuracy ranks (paper Fig. 6 / Tab. 3) ==", flush=True)
+        out = accuracy_rank.run(verbose=False)
+        for n, r in sorted(out["mean_rank"].items(), key=lambda kv: kv[1]):
+            print(f"  rank {r:5.2f}  {n}  [train {out['train_time_s'][n]:.1f}s]")
+    if "roofline" not in args.skip:
+        try:
+            from benchmarks import roofline_report
+            cells = roofline_report.load_cells()
+            if cells:
+                print(f"== roofline ({len(cells)} unrolled cells; full table in "
+                      "EXPERIMENTS.md) ==", flush=True)
+                worst = sorted(cells, key=lambda d: d["terms"]["roofline_fraction"])
+                for d in worst[:3] + worst[-3:]:
+                    t = d["terms"]
+                    print(f"  {d['arch']:16s} {d['shape']:12s} dominant={t['dominant']:10s} "
+                          f"roofline_frac={t['roofline_fraction']:.3f}")
+        except Exception as e:
+            print(f"  (roofline artifacts unavailable: {e})")
+    print(f"\nall benchmarks done in {time.time() - t_all:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Distributed GBT training on a (data x model) device grid (paper §3.9):
+example-parallel histogram psums + feature-parallel split exchange with
+bit-packed partition broadcast, plus the single-process simulation backend
+with a mid-training worker failure.
+
+    PYTHONPATH=src python examples/distributed_forest.py
+(spawns its own 8 placeholder devices; run unchanged on a real 256-chip pod)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+
+from repro.core.distributed import DistGBTConfig, DistributedGBT, SimulatedCluster
+
+rng = np.random.default_rng(0)
+N, F = 4096, 16
+codes = rng.integers(0, 64, (N, F)).astype(np.uint8)
+logit = (0.9 * (codes[:, 0] > 30) - 1.1 * (codes[:, 3] > 45)
+         + 0.6 * (codes[:, 5] > 10) * (codes[:, 8] > 20) - 0.2)
+y = (rng.random(N) < 1 / (1 + np.exp(-logit))).astype(np.float64)
+
+cfg = DistGBTConfig(max_depth=5, n_bins=64, num_trees=20)
+
+print("== 2-D grid training (2 'data' x 4 'model' workers) ==")
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+model = DistributedGBT(cfg, mesh).fit(codes, y)
+acc = ((model.predict_scores(codes) > 0) == y).mean()
+print(f"train accuracy: {acc:.4f} over {len(model.trees)} trees")
+
+print("\n== equivalence with a single-worker run ==")
+m1 = DistributedGBT(cfg, jax.make_mesh((1, 1), ("data", "model"))).fit(codes, y)
+print("max |score diff|:",
+      np.abs(m1.predict_scores(codes) - model.predict_scores(codes)).max())
+
+print("\n== fault tolerance: checkpoint + resume mid-forest ==")
+half = DistributedGBT(DistGBTConfig(max_depth=5, n_bins=64, num_trees=10),
+                      mesh).fit(codes, y)
+state = half.state_dict()
+state["pred"] = half.predict_scores(codes)
+resumed = DistributedGBT(cfg, mesh).fit(codes, y, resume_state=state)
+print("resume == straight run:",
+      np.allclose(resumed.predict_scores(codes), model.predict_scores(codes),
+                  atol=1e-5))
+
+print("\n== simulation backend (paper's third backend) + worker death ==")
+sim = SimulatedCluster(codes, n_workers=8, cfg=cfg)
+g = 0.5 - y
+stats = np.stack([g, np.full(N, 0.25), np.ones(N)], 1)
+t0 = sim.grow_tree(stats)
+sim.kill_worker(3)  # features reassigned round-robin
+t1 = sim.grow_tree(stats)
+print("tree unchanged after worker death:", np.allclose(t0["leaf"], t1["leaf"]))
+print(f"communication: {sim.traffic_bytes} bytes "
+      f"(candidates + 32x bit-packed partitions)")
+
+print("\n== serve through the engine stack ==")
+forest = model.to_forest([f"f{i}" for i in range(F)])
+from repro.core.tree import aggregate_gbt, predict_raw
+scores = aggregate_gbt(predict_raw(forest, codes[:8].astype(np.float32)), forest)
+print("first scores:", np.round(scores[:, 0], 3))

@@ -1,0 +1,179 @@
+"""The CLI API (paper §4.1): the same verbs, over format-prefixed datasets.
+
+  python -m repro.cli infer_dataspec --dataset=csv:train.csv --output=spec.json
+  python -m repro.cli show_dataspec  --dataspec=spec.json
+  python -m repro.cli train  --dataset=csv:train.csv --label=income \
+        --learner=GRADIENT_BOOSTED_TREES --output=/tmp/model \
+        [--task=CLASSIFICATION] [--hparam num_trees=50] [--template=...]
+  python -m repro.cli show_model --model=/tmp/model
+  python -m repro.cli evaluate --dataset=csv:test.csv --model=/tmp/model
+  python -m repro.cli predict  --dataset=csv:test.csv --model=/tmp/model \
+        --output=csv:predictions.csv
+  python -m repro.cli benchmark_inference --dataset=csv:test.csv --model=/tmp/model
+
+Training configurations are cross-API compatible (§3.10): a model trained
+here loads from Python and vice versa.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+
+import numpy as np
+
+
+def _load_spec(path: str):
+    from repro.core.dataspec import Column, DataSpec, Semantic
+    with open(path) as f:
+        raw = json.load(f)
+    cols = {}
+    for name, c in raw["columns"].items():
+        c["semantic"] = Semantic(c["semantic"])
+        cols[name] = Column(name=name, **{k: v for k, v in c.items() if k != "name"})
+    return DataSpec(columns=cols, n_rows=raw["n_rows"])
+
+
+def _dump_spec(spec, path: str):
+    out = {"n_rows": spec.n_rows, "columns": {}}
+    for name, c in spec.columns.items():
+        d = dataclasses.asdict(c)
+        d["semantic"] = c.semantic.value
+        out["columns"][name] = d
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def cmd_infer_dataspec(args):
+    from repro.core.dataspec import infer_dataspec
+    from repro.data.io import read_dataset
+    spec = infer_dataspec(read_dataset(args.dataset),
+                          semantics=dict(kv.split("=") for kv in args.semantic))
+    _dump_spec(spec, args.output)
+    print(f"dataspec written to {args.output} "
+          f"({len(spec.columns)} columns, {spec.n_rows} rows)")
+
+
+def cmd_show_dataspec(args):
+    print(_load_spec(args.dataspec).report())
+
+
+def cmd_train(args):
+    from repro.core import Task, get_learner
+    from repro.data.io import read_dataset
+    hparams = {}
+    for kv in args.hparam:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                pass
+        if v in ("true", "false", "True", "False"):
+            v = str(v).lower() == "true"
+        hparams[k] = v
+    cls = get_learner(args.learner)
+    kw = dict(label=args.label, task=Task(args.task), seed=args.seed, **hparams)
+    if args.template:
+        kw["template"] = args.template
+    learner = cls(**kw)
+    data = read_dataset(args.dataset)
+    valid = read_dataset(args.valid) if args.valid else None
+    model = learner.train(data, valid)
+    model.save(args.output)
+    se = getattr(model, "self_evaluation", None)
+    print(f"model written to {args.output}")
+    if se is not None:
+        print(se.report())
+
+
+def cmd_show_model(args):
+    from repro.core import Model
+    print(Model.load(args.model).summary())
+
+
+def cmd_evaluate(args):
+    from repro.core import Model
+    from repro.data.io import read_dataset
+    model = Model.load(args.model)
+    print(model.evaluate(read_dataset(args.dataset)).report())
+
+
+def cmd_predict(args):
+    from repro.core import Model, Task
+    from repro.data.io import read_dataset, write_dataset
+    model = Model.load(args.model)
+    pred = model.predict(read_dataset(args.dataset))
+    if model.task == Task.CLASSIFICATION:
+        cols = {f"p_{c}": pred[:, i] for i, c in enumerate(model.classes)}
+    else:
+        cols = {"prediction": np.asarray(pred)}
+    write_dataset(cols, args.output)
+    print(f"{len(pred)} predictions written to {args.output}")
+
+
+def cmd_benchmark_inference(args):
+    from repro.core import Model
+    from repro.core.engines import benchmark_inference
+    from repro.data.io import read_dataset
+    model = Model.load(args.model)
+    print(benchmark_inference(model, read_dataset(args.dataset),
+                              repetitions=args.repetitions))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="repro.cli", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("infer_dataspec")
+    p.add_argument("--dataset", required=True)
+    p.add_argument("--output", required=True)
+    p.add_argument("--semantic", action="append", default=[],
+                   help="override col=SEMANTIC")
+    p.set_defaults(fn=cmd_infer_dataspec)
+
+    p = sub.add_parser("show_dataspec")
+    p.add_argument("--dataspec", required=True)
+    p.set_defaults(fn=cmd_show_dataspec)
+
+    p = sub.add_parser("train")
+    p.add_argument("--dataset", required=True)
+    p.add_argument("--valid")
+    p.add_argument("--label", required=True)
+    p.add_argument("--task", default="CLASSIFICATION")
+    p.add_argument("--learner", default="GRADIENT_BOOSTED_TREES")
+    p.add_argument("--template")
+    p.add_argument("--seed", type=int, default=1234)
+    p.add_argument("--hparam", action="append", default=[])
+    p.add_argument("--output", required=True)
+    p.set_defaults(fn=cmd_train)
+
+    p = sub.add_parser("show_model")
+    p.add_argument("--model", required=True)
+    p.set_defaults(fn=cmd_show_model)
+
+    p = sub.add_parser("evaluate")
+    p.add_argument("--dataset", required=True)
+    p.add_argument("--model", required=True)
+    p.set_defaults(fn=cmd_evaluate)
+
+    p = sub.add_parser("predict")
+    p.add_argument("--dataset", required=True)
+    p.add_argument("--model", required=True)
+    p.add_argument("--output", required=True)
+    p.set_defaults(fn=cmd_predict)
+
+    p = sub.add_parser("benchmark_inference")
+    p.add_argument("--dataset", required=True)
+    p.add_argument("--model", required=True)
+    p.add_argument("--repetitions", type=int, default=3)
+    p.set_defaults(fn=cmd_benchmark_inference)
+
+    args = ap.parse_args(argv)
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Yggdrasil Decision Forests in JAX — the paper's primary contribution.
+
+Public API (Learner–Model abstraction, §3.1):
+
+    from repro.core import GradientBoostedTreesLearner, Task
+    model = GradientBoostedTreesLearner(label="income").train(train_ds)
+    print(model.evaluate(test_ds).report())
+"""
+from repro.core.api import (  # noqa: F401
+    Learner,
+    Model,
+    Task,
+    YdfError,
+    get_learner,
+    list_learners,
+    make_learner,
+    register_learner,
+)
+from repro.core.dataspec import (  # noqa: F401
+    DataSpec,
+    Semantic,
+    VerticalDataset,
+    dataset_from_raw,
+    encode_dataset,
+    infer_dataspec,
+)
+from repro.core.evaluation import Evaluation, evaluate_predictions  # noqa: F401
+
+
+def __getattr__(name):
+    # lazy: importing learners pulls numpy-heavy modules only when used
+    lazy = {
+        "GradientBoostedTreesLearner": "repro.core.gbt",
+        "RandomForestLearner": "repro.core.rf",
+        "CartLearner": "repro.core.cart",
+        "LinearLearner": "repro.core.baselines",
+        "HyperParameterTuner": "repro.core.metalearners",
+        "Ensembler": "repro.core.metalearners",
+        "Calibrator": "repro.core.metalearners",
+        "FeatureSelector": "repro.core.metalearners",
+        "cross_validate": "repro.core.metalearners",
+        "benchmark_inference": "repro.core.engines",
+    }
+    if name in lazy:
+        import importlib
+        return getattr(importlib.import_module(lazy[name]), name)
+    raise AttributeError(name)

@@ -1,0 +1,190 @@
+"""The Learner–Model abstraction (paper §3.1) and the registries (§3.5).
+
+A MODEL is a function observation -> prediction. A LEARNER is a function
+examples -> Model. Training and inference logic are deliberately separated
+(unlike fit/predict estimators): different Learners can produce the same Model
+type, Models deploy without their Learner, and meta-learners compose Learners
+generically (§3.2).
+
+Registration mirrors YDF's ``REGISTER_AbstractLearner``:
+
+    @register_learner("GRADIENT_BOOSTED_TREES")
+    class GradientBoostedTreesLearner(Learner): ...
+
+Error messages follow the paper's §2.1/§2.2 guidance: say what failed in task
+terms, show the offending values, and propose concrete fixes.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import enum
+import json
+import os
+import pickle
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+
+class Task(enum.Enum):
+    CLASSIFICATION = "CLASSIFICATION"
+    REGRESSION = "REGRESSION"
+    RANKING = "RANKING"
+
+
+class YdfError(ValueError):
+    """An error with directions (paper Table 1b style)."""
+
+
+# --------------------------------------------------------------------- Model
+
+class Model(abc.ABC):
+    """observation -> prediction. Serializable, inspectable, engine-compilable."""
+
+    task: Task
+    label: str
+
+    @abc.abstractmethod
+    def predict(self, dataset) -> np.ndarray:
+        """Classification: (N, n_classes) probabilities. Regression: (N,)."""
+
+    def predict_class(self, dataset) -> np.ndarray:
+        p = self.predict(dataset)
+        if self.task != Task.CLASSIFICATION:
+            raise YdfError(
+                f"predict_class requires a classification model, got task={self.task}. "
+                "Use predict() for regression/ranking predictions.")
+        return np.argmax(p, axis=-1)
+
+    def evaluate(self, dataset) -> "Evaluation":
+        from repro.core.evaluation import evaluate_predictions
+        from repro.core.dataspec import label_values
+        y = label_values(self, dataset)
+        return evaluate_predictions(self.task, self.predict(dataset), y,
+                                    classes=getattr(self, "classes", None))
+
+    # ---- self-description (show_model analogue)
+    def summary(self) -> str:
+        return f"{type(self).__name__}(task={self.task.value}, label={self.label!r})"
+
+    def variable_importances(self) -> dict[str, dict[str, float]]:
+        return {}
+
+    # ---- engines (§3.7): lossy compilation to the fastest compatible engine
+    def compile(self, engine: str | None = None):
+        raise YdfError(
+            f"{type(self).__name__} has no inference engines. Engines exist for "
+            "decision-forest models (see repro.core.engines).")
+
+    # ---- serialization: backwards-compatible via format version tag
+    FORMAT_VERSION = 1
+
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        meta = {"format_version": self.FORMAT_VERSION, "class": type(self).__name__}
+        with open(os.path.join(path, "header.json"), "w") as f:
+            json.dump(meta, f)
+        with open(os.path.join(path, "model.pkl"), "wb") as f:
+            pickle.dump(self, f)
+
+    @staticmethod
+    def load(path: str) -> "Model":
+        with open(os.path.join(path, "header.json")) as f:
+            meta = json.load(f)
+        if meta["format_version"] > Model.FORMAT_VERSION:
+            raise YdfError(
+                f"Model at {path!r} was saved with format v{meta['format_version']}, "
+                f"this library reads up to v{Model.FORMAT_VERSION}. Solutions: (1) "
+                "upgrade the library, or (2) re-export the model in an older format.")
+        with open(os.path.join(path, "model.pkl"), "rb") as f:
+            return pickle.load(f)
+
+
+# --------------------------------------------------------------------- Learner
+
+class Learner(abc.ABC):
+    """examples -> Model. Hyper-parameters are fixed at construction; ``train``
+    is deterministic given (hyper-parameters, dataset, seed) — paper §3.11."""
+
+    def __init__(self, label: str, task: Task = Task.CLASSIFICATION, *,
+                 seed: int = 1234, **hparams):
+        self.label = label
+        self.task = task
+        self.seed = seed
+        self.hparams = self.default_hparams()
+        unknown = set(hparams) - set(dataclasses.asdict(self.hparams))
+        if unknown:
+            known = sorted(dataclasses.asdict(self.hparams))
+            raise YdfError(
+                f"Unknown hyper-parameter(s) {sorted(unknown)} for "
+                f"{type(self).__name__}. Known hyper-parameters: {known}.")
+        self.hparams = dataclasses.replace(self.hparams, **hparams)
+
+    @abc.abstractmethod
+    def train(self, dataset, valid=None) -> Model:
+        """Train a Model. ``valid`` is optional (§3.3): when a learner needs
+        validation (e.g. GBT early stopping) and none is given, it extracts one
+        from the training set itself."""
+
+    @abc.abstractmethod
+    def default_hparams(self):
+        ...
+
+    # cross-API-compatible training configuration (paper §3.10)
+    def train_config(self) -> dict:
+        return {"learner": _name_of(type(self)), "label": self.label,
+                "task": self.task.value, "seed": self.seed,
+                "hparams": dataclasses.asdict(self.hparams)}
+
+
+# --------------------------------------------------------------------- registry
+
+_LEARNERS: dict[str, type] = {}
+
+
+def register_learner(name: str) -> Callable[[type], type]:
+    def deco(cls: type) -> type:
+        if name in _LEARNERS and _LEARNERS[name] is not cls:
+            raise ValueError(f"duplicate learner registration {name!r}")
+        _LEARNERS[name] = cls
+        cls._registry_name = name
+        return cls
+    return deco
+
+
+def _name_of(cls: type) -> str:
+    return getattr(cls, "_registry_name", cls.__name__)
+
+
+def get_learner(name: str) -> type:
+    _ensure_builtin()
+    if name not in _LEARNERS:
+        raise YdfError(
+            f"Unknown learner {name!r}. Registered learners: {sorted(_LEARNERS)}. "
+            "Register custom learners with @register_learner(name).")
+    return _LEARNERS[name]
+
+
+def list_learners() -> list[str]:
+    _ensure_builtin()
+    return sorted(_LEARNERS)
+
+
+def make_learner(config: dict) -> Learner:
+    """Build a learner from a cross-API training configuration dict."""
+    cls = get_learner(config["learner"])
+    return cls(label=config["label"], task=Task(config.get("task", "CLASSIFICATION")),
+               seed=config.get("seed", 1234), **config.get("hparams", {}))
+
+
+_BUILTIN = False
+
+
+def _ensure_builtin() -> None:
+    global _BUILTIN
+    if _BUILTIN:
+        return
+    _BUILTIN = True
+    from repro.core import cart, gbt, rf, baselines, metalearners  # noqa: F401

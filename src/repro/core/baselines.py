@@ -1,0 +1,106 @@
+"""Baseline learners the paper benchmarks against (§5): a linear model
+(TF Linear analogue — trained with JAX autodiff, demonstrating the §2.4
+neural-library composition), and an exact-splitter GBT stand-in for the
+XGBoost-style "exact" configuration.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.api import Learner, Model, Task, YdfError, register_learner
+from repro.core.dataspec import Semantic, VerticalDataset
+from repro.core.models import _as_vertical, prepare_train_data
+
+
+def _design_matrix(ds: VerticalDataset, features: list[str], spec) -> np.ndarray:
+    """Standardized numericals + one-hot categoricals (the paper's encoding
+    for libraries without native categorical support)."""
+    cols = []
+    for name in features:
+        col = spec[name]
+        if col.semantic == Semantic.NUMERICAL:
+            v = ds.numerical[name].astype(np.float64).copy()
+            v[np.isnan(v)] = col.mean
+            sd = col.std if col.std > 1e-12 else 1.0
+            cols.append(((v - col.mean) / sd)[:, None])
+        else:
+            v = ds.categorical[name].copy()
+            v[v < 0] = 0
+            V = max(col.vocab_size, int(v.max()) + 1, 2)
+            oh = np.zeros((len(v), V), np.float64)
+            oh[np.arange(len(v)), v] = 1.0
+            cols.append(oh)
+    return np.concatenate(cols, axis=1)
+
+
+class LinearModel(Model):
+    def __init__(self, *, W, b, spec, features, label, task, classes):
+        self.W, self.b = W, b
+        self.spec, self.features = spec, features
+        self.label, self.task, self.classes = label, task, classes
+
+    def predict(self, dataset) -> np.ndarray:
+        ds = _as_vertical(dataset, self.spec)
+        X = _design_matrix(ds, self.features, self.spec)
+        z = X @ self.W + self.b
+        if self.task == Task.REGRESSION:
+            return z[:, 0]
+        z = z - z.max(1, keepdims=True)
+        p = np.exp(z)
+        return p / p.sum(1, keepdims=True)
+
+
+@register_learner("LINEAR")
+class LinearLearner(Learner):
+    """Multinomial logistic / linear regression, trained with JAX (Adam)."""
+
+    def default_hparams(self):
+        from dataclasses import make_dataclass
+        HP = make_dataclass("LinearHparams", [("steps", int, 300),
+                                              ("lr", float, 0.05),
+                                              ("l2", float, 1e-4)])
+        return HP()
+
+    def train(self, dataset, valid=None) -> LinearModel:
+        import jax
+        import jax.numpy as jnp
+
+        td = prepare_train_data(self, dataset)
+        X = _design_matrix(td.ds, td.features, td.ds.spec)
+        N, D = X.shape
+        K = td.n_classes if self.task == Task.CLASSIFICATION else 1
+        y = td.y
+        hp = self.hparams
+        Xj = jnp.asarray(X, jnp.float32)
+        yj = jnp.asarray(y)
+
+        def loss_fn(params):
+            z = Xj @ params["W"] + params["b"]
+            if self.task == Task.REGRESSION:
+                l = jnp.mean(jnp.square(z[:, 0] - yj))
+            else:
+                l = jnp.mean(jax.nn.logsumexp(z, 1) - z[jnp.arange(N), yj])
+            return l + hp.l2 * jnp.sum(jnp.square(params["W"]))
+
+        params = {"W": jnp.zeros((D, K), jnp.float32),
+                  "b": jnp.zeros((K,), jnp.float32)}
+        m = jax.tree.map(jnp.zeros_like, params)
+        v = jax.tree.map(jnp.zeros_like, params)
+
+        @jax.jit
+        def step(params, m, v, t):
+            g = jax.grad(loss_fn)(params)
+            m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+            v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * jnp.square(b), v, g)
+            mh = jax.tree.map(lambda a: a / (1 - 0.9 ** (t + 1)), m)
+            vh = jax.tree.map(lambda a: a / (1 - 0.999 ** (t + 1)), v)
+            params = jax.tree.map(
+                lambda p, a, b: p - hp.lr * a / (jnp.sqrt(b) + 1e-8), params, mh, vh)
+            return params, m, v
+
+        for t in range(hp.steps):
+            params, m, v = step(params, m, v, t)
+
+        return LinearModel(W=np.asarray(params["W"]), b=np.asarray(params["b"]),
+                           spec=td.ds.spec, features=td.features,
+                           label=self.label, task=self.task, classes=td.classes)

@@ -1,0 +1,294 @@
+"""Automated feature ingestion (paper §3.4).
+
+A ``DataSpec`` records, per column, its *semantic* (NUMERICAL / CATEGORICAL /
+BOOLEAN), dictionary, and statistics. Semantics are inferred by heuristics and
+are overridable by the user — automation, surfaced, controllable (§2.1).
+
+``VerticalDataset`` is the encoded, column-major view learners consume:
+  * numerical  -> float32, missing = NaN
+  * categorical -> int32 in [0, vocab), 0 = out-of-dictionary; missing = -1
+  * boolean    -> int32 {0, 1}, missing = -1
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+import numpy as np
+
+from repro.core.api import Task, YdfError
+
+OOD = "<OOD>"
+
+
+class Semantic(enum.Enum):
+    NUMERICAL = "NUMERICAL"
+    CATEGORICAL = "CATEGORICAL"
+    BOOLEAN = "BOOLEAN"
+
+
+@dataclass
+class Column:
+    name: str
+    semantic: Semantic
+    # categorical
+    vocab: list[str] = field(default_factory=list)  # vocab[0] == OOD
+    counts: dict[str, int] = field(default_factory=dict)
+    # numerical
+    mean: float = 0.0
+    std: float = 0.0
+    min: float = 0.0
+    max: float = 0.0
+    n_missing: int = 0
+    manually_defined: bool = False
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.vocab)
+
+
+@dataclass
+class DataSpec:
+    columns: dict[str, Column]
+    n_rows: int
+
+    def __getitem__(self, name: str) -> Column:
+        return self.columns[name]
+
+    def feature_names(self, label: str | None = None,
+                      features: list[str] | None = None) -> list[str]:
+        if features is not None:
+            missing = [f for f in features if f not in self.columns]
+            if missing:
+                raise YdfError(
+                    f"Input feature(s) {missing} not found in the dataset. "
+                    f"Available columns: {sorted(self.columns)}.")
+            return list(features)
+        return [c for c in self.columns if c != label]
+
+    # show_dataspec analogue (§4.1 artefacts)
+    def report(self) -> str:
+        by_sem: dict[str, list[Column]] = {}
+        for c in self.columns.values():
+            by_sem.setdefault(c.semantic.value, []).append(c)
+        lines = [f"Number of records: {self.n_rows}",
+                 f"Number of columns: {len(self.columns)}", ""]
+        for sem, cols in sorted(by_sem.items()):
+            pct = 100.0 * len(cols) / max(1, len(self.columns))
+            lines.append(f"{sem}: {len(cols)} ({pct:.0f}%)")
+            for c in sorted(cols, key=lambda c: c.name):
+                if c.semantic == Semantic.NUMERICAL:
+                    lines.append(
+                        f'  "{c.name}" NUMERICAL mean:{c.mean:g} min:{c.min:g} '
+                        f"max:{c.max:g} sd:{c.std:g} nas:{c.n_missing}")
+                else:
+                    top = max(c.counts, key=c.counts.get) if c.counts else "-"
+                    lines.append(
+                        f'  "{c.name}" {c.semantic.value} has-dict '
+                        f"vocab-size:{c.vocab_size} most-frequent:{top!r} "
+                        f"nas:{c.n_missing}"
+                        + (" manually-defined" if c.manually_defined else ""))
+        return "\n".join(lines)
+
+
+# ----------------------------------------------------------------- inference
+
+_MISSING_TOKENS = {"", "na", "n/a", "nan", "none", "null", "?"}
+
+
+def _is_missing(v) -> bool:
+    if v is None:
+        return True
+    if isinstance(v, float) and np.isnan(v):
+        return True
+    return isinstance(v, str) and v.strip().lower() in _MISSING_TOKENS
+
+
+def _try_float(v) -> float | None:
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return None
+
+
+def infer_dataspec(data: Mapping[str, Any], *,
+                   semantics: Mapping[str, Semantic | str] | None = None,
+                   max_vocab: int = 2048, min_vocab_frequency: int = 1) -> DataSpec:
+    """Infer column semantics from raw columns (lists / object arrays).
+
+    Heuristics (documented, §2.1 "clarity"): numeric dtypes -> NUMERICAL;
+    strings -> CATEGORICAL (numeric-looking strings stay CATEGORICAL only if
+    non-numeric values are present); bools / {0,1}-only integers -> BOOLEAN.
+    ``semantics`` overrides win and are flagged ``manually-defined``.
+    """
+    semantics = dict(semantics or {})
+    columns: dict[str, Column] = {}
+    n_rows = None
+    for name, raw in data.items():
+        vals = np.asarray(raw, dtype=object).ravel()
+        if n_rows is None:
+            n_rows = len(vals)
+        elif len(vals) != n_rows:
+            raise YdfError(
+                f"Column {name!r} has {len(vals)} values but previous columns "
+                f"have {n_rows}. All columns must have the same length.")
+        missing = np.array([_is_missing(v) for v in vals])
+        present = vals[~missing]
+        override = semantics.get(name)
+        if override is not None:
+            sem = Semantic(override) if not isinstance(override, Semantic) else override
+        else:
+            sem = _infer_semantic(present)
+        col = Column(name=name, semantic=sem, n_missing=int(missing.sum()),
+                     manually_defined=override is not None)
+        if sem == Semantic.NUMERICAL:
+            nums = np.array([_try_float(v) for v in present], dtype=object)
+            bad = [v for v, f in zip(present, nums) if f is None]
+            if bad:
+                raise YdfError(
+                    f"Column {name!r} is NUMERICAL but contains non-numeric "
+                    f"value(s) e.g. {bad[:3]}. Solutions: (1) declare the column "
+                    f"CATEGORICAL via semantics={{{name!r}: 'CATEGORICAL'}}, or "
+                    "(2) clean the values.")
+            fs = nums.astype(np.float64)
+            if fs.size:
+                col.mean, col.std = float(fs.mean()), float(fs.std())
+                col.min, col.max = float(fs.min()), float(fs.max())
+        elif sem == Semantic.BOOLEAN:
+            pass
+        else:
+            uniq, cnt = np.unique(present.astype(str), return_counts=True)
+            order = np.argsort(-cnt, kind="stable")
+            vocab = [OOD]
+            counts = {}
+            for i in order:
+                if cnt[i] >= min_vocab_frequency and len(vocab) < max_vocab:
+                    vocab.append(str(uniq[i]))
+                    counts[str(uniq[i])] = int(cnt[i])
+            col.vocab = vocab
+            col.counts = counts
+        columns[name] = col
+    return DataSpec(columns=columns, n_rows=n_rows or 0)
+
+
+def _infer_semantic(present: np.ndarray) -> Semantic:
+    if present.size == 0:
+        return Semantic.NUMERICAL
+    if all(isinstance(v, (bool, np.bool_)) for v in present[:100]):
+        return Semantic.BOOLEAN
+    floats = [_try_float(v) for v in present]
+    if all(f is not None for f in floats):
+        vals = set(float(f) for f in floats[:1000])
+        if vals <= {0.0, 1.0}:
+            return Semantic.BOOLEAN
+        return Semantic.NUMERICAL
+    return Semantic.CATEGORICAL
+
+
+# ----------------------------------------------------------------- encoding
+
+@dataclass
+class VerticalDataset:
+    spec: DataSpec
+    numerical: dict[str, np.ndarray]    # float32, NaN = missing
+    categorical: dict[str, np.ndarray]  # int32, -1 = missing, 0 = OOD
+    n_rows: int
+
+    def column(self, name: str) -> np.ndarray:
+        if name in self.numerical:
+            return self.numerical[name]
+        return self.categorical[name]
+
+    def subset(self, idx: np.ndarray) -> "VerticalDataset":
+        return VerticalDataset(
+            spec=self.spec,
+            numerical={k: v[idx] for k, v in self.numerical.items()},
+            categorical={k: v[idx] for k, v in self.categorical.items()},
+            n_rows=len(idx),
+        )
+
+
+def encode_dataset(data: Mapping[str, Any], spec: DataSpec) -> VerticalDataset:
+    numerical: dict[str, np.ndarray] = {}
+    categorical: dict[str, np.ndarray] = {}
+    n_rows = 0
+    for name, col in spec.columns.items():
+        if name not in data:
+            raise YdfError(
+                f"Column {name!r} of the dataspec is missing from the dataset. "
+                "Solutions: (1) provide the column, or (2) re-infer the dataspec "
+                "on this dataset.")
+        vals = np.asarray(data[name], dtype=object).ravel()
+        n_rows = len(vals)
+        if col.semantic == Semantic.NUMERICAL:
+            out = np.full(len(vals), np.nan, np.float32)
+            for i, v in enumerate(vals):
+                if not _is_missing(v):
+                    f = _try_float(v)
+                    out[i] = np.nan if f is None else f
+            numerical[name] = out
+        elif col.semantic == Semantic.BOOLEAN:
+            out = np.full(len(vals), -1, np.int32)
+            for i, v in enumerate(vals):
+                if not _is_missing(v):
+                    out[i] = 1 if str(v).strip().lower() in ("1", "1.0", "true") else 0
+            categorical[name] = out
+        else:
+            lookup = {v: i for i, v in enumerate(col.vocab)}
+            out = np.full(len(vals), -1, np.int32)
+            for i, v in enumerate(vals):
+                if not _is_missing(v):
+                    out[i] = lookup.get(str(v), 0)  # 0 = OOD
+            categorical[name] = out
+    return VerticalDataset(spec=spec, numerical=numerical,
+                           categorical=categorical, n_rows=n_rows)
+
+
+def dataset_from_raw(data: Mapping[str, Any], **kw) -> VerticalDataset:
+    return encode_dataset(data, infer_dataspec(data, **kw))
+
+
+# ----------------------------------------------------------------- labels
+
+def check_classification_label(col: Column, task: Task) -> None:
+    """The paper's §2.2 safety check, verbatim in spirit."""
+    if col.semantic == Semantic.NUMERICAL:
+        raise YdfError(
+            f'The classification label column "{col.name}" is NUMERICAL '
+            f"({col.mean:.4g} mean over a [{col.min:g}, {col.max:g}] range) and "
+            "looks like a regression target. Solutions: (1) configure the "
+            "training as a regression with task=REGRESSION, or (2) declare the "
+            "label CATEGORICAL explicitly if the numbers are class ids.")
+    n_classes = col.vocab_size - 1
+    if n_classes > 0.5 * 10_000 and n_classes > 100:
+        raise YdfError(
+            f'The classification label column "{col.name}" has {n_classes} '
+            "unique values and looks like a regression column. Solutions: (1) "
+            "use task=REGRESSION, or (2) reduce the label cardinality.")
+
+
+def label_values(model, dataset) -> np.ndarray:
+    """0-based class indices (classification) or float targets (regression),
+    aligned with ``Model.predict`` output columns."""
+    if isinstance(dataset, VerticalDataset):
+        y = dataset.column(model.label)
+        if model.task == Task.CLASSIFICATION:
+            if (y <= 0).any():
+                raise YdfError(
+                    f'Label column "{model.label}" contains missing or '
+                    "out-of-dictionary values; evaluation requires labeled "
+                    "examples. Solution: filter unlabeled rows first.")
+            return (y - 1).astype(np.int32)  # vocab[0] is OOD
+        return y.astype(np.float32)
+    raw = np.asarray(dataset[model.label], dtype=object).ravel()
+    if model.task == Task.CLASSIFICATION:
+        lookup = {str(v): i for i, v in enumerate(model.classes)}
+        try:
+            return np.array([lookup[str(v)] for v in raw], np.int32)
+        except KeyError as e:
+            raise YdfError(
+                f"Label value {e.args[0]!r} was not seen during training. "
+                f"Training classes: {model.classes}.")
+    return np.array([float(v) for v in raw], np.float32)

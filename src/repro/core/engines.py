@@ -1,0 +1,97 @@
+"""Inference engines (paper §3.7): a Model *compiles* — possibly lossily — to
+the fastest engine compatible with its structure and the hardware.
+
+Engines (ordered by preference):
+  * "pallas"     — VMEM-tiled lockstep traversal (repro/kernels/forest_infer);
+                   requires axis-aligned numerical/categorical conditions and
+                   node counts that fit the kernel's VMEM budget. On CPU runs
+                   in interpret mode (correctness path); TPU is the target.
+  * "vectorized" — numpy lockstep traversal (tree.predict_raw).
+  * "naive"      — Algorithm 1 of the paper: per-example while-loop. Readable
+                   oracle; always compatible.
+
+``compile_model(model)`` picks the best compatible engine; requesting an
+incompatible engine by name raises with the reason (lossy-compilation made
+explicit, §2.1).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.core.api import YdfError
+from repro.core.tree import Forest, predict_naive, predict_raw
+
+
+@dataclass
+class Engine:
+    name: str
+    per_tree: Callable[[np.ndarray], np.ndarray]  # X (N,F) -> (N,T,out_dim)
+    note: str = ""
+
+
+def _compat_pallas(forest: Forest) -> str | None:
+    if forest.obl_weights is not None and forest.obl_weights.shape[-1] and \
+            (forest.feature == -2).any():
+        return "oblique conditions are not supported by the pallas engine"
+    if forest.max_nodes > 4096:
+        return "node capacity exceeds the pallas engine VMEM budget"
+    return None
+
+
+def available_engines(forest: Forest) -> list[str]:
+    out = []
+    if _compat_pallas(forest) is None:
+        out.append("pallas")
+    out += ["vectorized", "naive"]
+    return out
+
+
+def compile_model(model, engine: str | None = None) -> Engine:
+    forest: Forest = model.forest
+    if engine is None:
+        engine = available_engines(forest)[0]
+        # prefer vectorized on CPU hosts: pallas-interpret is a correctness
+        # path, not a fast path (lossy-compilation choice is hardware-aware)
+        if engine == "pallas":
+            import jax
+            if jax.default_backend() == "cpu":
+                engine = "vectorized"
+    if engine == "naive":
+        return Engine("naive", lambda X: predict_naive(forest, X))
+    if engine == "vectorized":
+        return Engine("vectorized", lambda X: predict_raw(forest, X))
+    if engine == "pallas":
+        reason = _compat_pallas(forest)
+        if reason:
+            raise YdfError(
+                f"Model is not compatible with the 'pallas' engine: {reason}. "
+                f"Compatible engines: {available_engines(forest)}.")
+        from repro.kernels.forest_infer.ops import forest_predict
+        return Engine("pallas", lambda X: np.asarray(forest_predict(forest, X)),
+                      note="interpret-mode on CPU; compiled on TPU")
+    raise YdfError(f"Unknown engine {engine!r}. "
+                   f"Available: {available_engines(forest)}.")
+
+
+def benchmark_inference(model, dataset, *, repetitions: int = 5) -> str:
+    """App. B.4 analogue: time every compatible engine on the dataset."""
+    from repro.core.models import _as_vertical, raw_matrix
+    ds = _as_vertical(dataset, model.spec)
+    X = raw_matrix(ds, model.features)
+    lines = ["benchmark_inference (avg over %d reps, batch=%d):"
+             % (repetitions, X.shape[0])]
+    for name in available_engines(model.forest):
+        eng = compile_model(model, name)
+        eng.per_tree(X[:min(64, len(X))])  # warmup / trace
+        t0 = time.perf_counter()
+        for _ in range(repetitions):
+            eng.per_tree(X)
+        dt = (time.perf_counter() - t0) / repetitions
+        us = dt / max(1, X.shape[0]) * 1e6
+        lines.append(f"  {name:<12s} {us:10.3f} us/example  "
+                     f"({dt * 1e3:.2f} ms/batch)")
+    return "\n".join(lines)

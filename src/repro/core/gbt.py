@@ -1,0 +1,191 @@
+"""Gradient Boosted Trees learner (Friedman 2001), YDF-default-faithful:
+paper App. C.1 defaults, LOSS_INCREASE early stopping on a self-extracted
+validation set (§3.3), LOCAL or BEST_FIRST_GLOBAL growth, CART/RANDOM/ONE_HOT
+categorical splits, optional sparse-oblique splits, deterministic training.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.api import Learner, Task, YdfError, register_learner
+from repro.core.grower import GrowthParams, grow_tree
+from repro.core.hparams import GBTHparams, apply_template
+from repro.core.losses import make_loss
+from repro.core.models import (
+    GradientBoostedTreesModel,
+    TrainData,
+    extract_validation,
+    prepare_train_data,
+)
+from repro.core.evaluation import Evaluation, evaluate_predictions
+from repro.core.splitters import SplitterParams
+from repro.core.tree import Forest, empty_forest, predict_raw
+
+
+@register_learner("GRADIENT_BOOSTED_TREES")
+class GradientBoostedTreesLearner(Learner):
+    def __init__(self, label: str, task: Task = Task.CLASSIFICATION, *,
+                 seed: int = 1234, template: str | None = None, **hparams):
+        super().__init__(label, task, seed=seed, **hparams)
+        self.hparams = apply_template("GRADIENT_BOOSTED_TREES", self.hparams, template)
+
+    def default_hparams(self) -> GBTHparams:
+        return GBTHparams()
+
+    # ------------------------------------------------------------- train
+    def train(self, dataset, valid=None) -> GradientBoostedTreesModel:
+        hp: GBTHparams = self.hparams
+        rng = np.random.default_rng(self.seed)
+        td = prepare_train_data(self, dataset, max_bins=hp.max_bins)
+        loss = make_loss(self.task, hp.loss, td.n_classes)
+        K = loss.out_dim
+
+        # §3.3: extract validation from train when early stopping needs one
+        if valid is not None:
+            train_idx = np.arange(td.ds.n_rows)
+            Xv, yv, wv = _encode_eval_set(self, td, valid)
+        elif hp.early_stopping != "NONE" and hp.validation_ratio > 0:
+            train_idx, valid_idx = extract_validation(
+                td.ds.n_rows, hp.validation_ratio, self.seed)
+            Xv, yv = td.X_raw[valid_idx], td.y[valid_idx]
+            wv = td.w[valid_idx]
+        else:
+            train_idx = np.arange(td.ds.n_rows)
+            Xv = yv = wv = None
+
+        sub_td = _subset_td(td, train_idx)
+        N = len(train_idx)
+        y, w = sub_td.y, sub_td.w
+
+        max_nodes = (hp.max_num_nodes if hp.growing_strategy == "BEST_FIRST_GLOBAL"
+                     else 2 ** (hp.max_depth + 1))
+        oblique = hp.split_axis == "SPARSE_OBLIQUE"
+        n_num = int((~td.binned.is_cat).sum())
+        forest = empty_forest(hp.num_trees * K, max_nodes, 1,
+                              oblique_dims=n_num if oblique else 0,
+                              feature_names=td.features)
+        forest.init_pred = np.zeros(K, np.float32)
+        init = loss.init_pred(y, w)
+        forest.init_pred[:] = init
+        forest.out_dim = K
+        forest.tree_class = np.arange(hp.num_trees * K, dtype=np.int32) % K
+
+        sp = SplitterParams(
+            stat_kind="gh", min_examples=hp.min_examples,
+            l2=hp.l2_regularization, categorical_algorithm=hp.categorical_algorithm,
+            num_candidate_ratio=(hp.num_candidate_attributes_ratio
+                                 if hp.num_candidate_attributes_ratio > 0 else 1.0),
+            oblique=oblique,
+            oblique_num_projections_exponent=hp.sparse_oblique_num_projections_exponent,
+        )
+        gp = GrowthParams(max_depth=hp.max_depth, max_nodes=max_nodes,
+                          growing_strategy=hp.growing_strategy, splitter=sp)
+        shrink, l2 = hp.shrinkage, hp.l2_regularization
+
+        def leaf_fn(s):
+            # s = [sum g, sum h_gain, sum h_true, count]; Newton step * shrinkage
+            return np.array([-shrink * s[0] / (s[2] + l2 + 1e-12)], np.float32)
+
+        pred = np.tile(init[None, :], (N, 1)).astype(np.float64)
+        pred_v = (np.tile(init[None, :], (len(yv), 1)).astype(np.float64)
+                  if yv is not None else None)
+        best_loss, best_t, patience = np.inf, 0, hp.early_stopping_patience
+        train_losses, valid_losses = [], []
+
+        for it in range(hp.num_trees):
+            g, h = loss.grad_hess(pred, y, w)
+            bag = w if hp.subsample >= 1.0 else w * (rng.random(N) < hp.subsample)
+            for k in range(K):
+                t = it * K + k
+                stats = np.stack([
+                    g[:, k] * bag,
+                    (h[:, k] if hp.use_hessian_gain else np.ones(N)) * bag,
+                    h[:, k] * bag,
+                    bag,
+                ], axis=1).astype(np.float64)
+                node_of = grow_tree(forest, t, sub_td.binned, sub_td.X_raw,
+                                    stats, bag > 0, leaf_fn, gp, rng,
+                                    sub_td.num_lo, sub_td.num_hi)
+                vals = forest.leaf_value[t, np.maximum(node_of, 0), 0]
+                upd = np.where(node_of >= 0, vals, 0.0)
+                if hp.subsample < 1.0:  # OOB examples still move (predict path)
+                    oob = (bag <= 0)
+                    if oob.any():
+                        tr = predict_raw(_one_tree(forest, t), sub_td.X_raw[oob])
+                        upd = upd.copy()
+                        upd[oob] = tr[:, 0, 0]
+                pred[:, k] += upd
+                if pred_v is not None:
+                    pv = predict_raw(_one_tree(forest, t), Xv)[:, 0, 0]
+                    pred_v[:, k] += pv
+            train_losses.append(loss.value(pred, y, w))
+            if pred_v is not None:
+                vl = loss.value(pred_v, yv, wv)
+                valid_losses.append(vl)
+                if vl < best_loss - 1e-9:
+                    best_loss, best_t = vl, it + 1
+                elif hp.early_stopping == "LOSS_INCREASE" and it + 1 - best_t >= patience:
+                    break
+
+        n_keep = (best_t if pred_v is not None and hp.early_stopping != "NONE"
+                  else it + 1) * K
+        forest = forest.truncated(max(n_keep, K))
+        self_eval = None
+        if pred_v is not None and len(yv):
+            act = loss.activation(pred_v)
+            if self.task == Task.CLASSIFICATION:
+                self_eval = evaluate_predictions(self.task, act, yv,
+                                                 classes=td.classes,
+                                                 source="validation")
+            else:
+                self_eval = evaluate_predictions(self.task, act, yv,
+                                                 source="validation")
+        model = GradientBoostedTreesModel(
+            loss=loss, forest=forest, spec=td.ds.spec, features=td.features,
+            label=self.label, task=self.task, classes=td.classes,
+            self_evaluation=self_eval)
+        model.training_logs = {"train_loss": train_losses,
+                               "valid_loss": valid_losses,
+                               "num_trees": forest.n_trees // K}
+        return model
+
+
+def _one_tree(forest: Forest, t: int) -> Forest:
+    return dataclasses.replace(
+        forest,
+        feature=forest.feature[t:t + 1], threshold=forest.threshold[t:t + 1],
+        split_bin=forest.split_bin[t:t + 1], cat_mask=forest.cat_mask[t:t + 1],
+        left_child=forest.left_child[t:t + 1],
+        leaf_value=forest.leaf_value[t:t + 1], n_nodes=forest.n_nodes[t:t + 1],
+        obl_weights=None if forest.obl_weights is None else forest.obl_weights[t:t + 1],
+        obl_features=None if forest.obl_features is None else forest.obl_features[t:t + 1],
+        tree_class=None if forest.tree_class is None else forest.tree_class[t:t + 1])
+
+
+def _encode_eval_set(learner, td: TrainData, valid):
+    """Encode an external validation set with the TRAINING dataspec so class
+    indices and imputation match (paper §3.3 external-valid path)."""
+    from repro.core.models import _as_vertical, raw_matrix
+    vds = _as_vertical(valid, td.ds.spec)
+    Xv = raw_matrix(vds, td.features)
+    if learner.task == Task.CLASSIFICATION:
+        enc = vds.categorical[learner.label]
+        if (enc <= 0).any():
+            raise YdfError(
+                f'Validation label "{learner.label}" contains values unseen in '
+                "training (or missing). Solution: filter those rows.")
+        yv = (enc - 1).astype(np.int32)
+    else:
+        yv = vds.numerical[learner.label].astype(np.float64)
+    return Xv, yv, np.ones(len(yv), np.float64)
+
+
+def _subset_td(td: TrainData, idx: np.ndarray) -> TrainData:
+    import dataclasses as dc
+    if len(idx) == td.ds.n_rows and (idx == np.arange(len(idx))).all():
+        return td
+    binned = dc.replace(td.binned, codes=td.binned.codes[idx])
+    return dc.replace(td, binned=binned, X_raw=td.X_raw[idx], y=td.y[idx],
+                      w=td.w[idx])

@@ -1,0 +1,195 @@
+"""Tree growth engine shared by GBT / RF / CART learners.
+
+Two strategies (paper §3.11 templates):
+  * LOCAL              — divide-and-conquer, level-wise: every frontier node of
+                         the current depth is split in one histogram pass
+                         (one scatter over all active examples).
+  * BEST_FIRST_GLOBAL  — leaf-wise (Shi 2007): repeatedly split the leaf with
+                         the best gain until the node budget is exhausted;
+                         child histograms use the parent-minus-sibling
+                         subtraction trick.
+
+The grower owns node allocation in the Forest SoA and the per-example
+``node_of`` routing; leaf values come from a caller-provided ``leaf_fn`` over
+aggregated node stats.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+from repro.core.binning import BinnedFeatures
+from repro.core.splitters import (
+    Split,
+    SplitterParams,
+    apply_split,
+    best_splits,
+    build_histogram,
+    oblique_splits,
+)
+from repro.core.tree import MASK_WORDS, Forest
+
+
+@dataclass
+class GrowthParams:
+    max_depth: int = 6
+    max_nodes: int = 2048           # total node budget per tree
+    growing_strategy: str = "LOCAL"  # LOCAL | BEST_FIRST_GLOBAL
+    splitter: SplitterParams = None  # type: ignore
+
+
+def _set_split(forest: Forest, t: int, node: int, split: Split,
+               binned: BinnedFeatures) -> None:
+    if split.obl_features is not None:
+        forest.feature[t, node] = -2
+        k = min(len(split.obl_features), forest.obl_weights.shape[-1])
+        forest.obl_features[t, node, :k] = split.obl_features[:k]
+        forest.obl_weights[t, node, :k] = split.obl_weights[:k]
+        forest.threshold[t, node] = split.threshold
+        return
+    forest.feature[t, node] = split.feature
+    if split.cat_right is not None:
+        for c in split.cat_right:
+            forest.cat_mask[t, node, c // 32] |= np.uint32(1) << np.uint32(c % 32)
+    else:
+        forest.threshold[t, node] = split.threshold
+        forest.split_bin[t, node] = split.split_bin
+
+
+def _feature_sample_mask(n_nodes: int, F: int, ratio: float,
+                         rng: np.random.Generator) -> np.ndarray | None:
+    if ratio >= 1.0:
+        return None
+    k = max(1, int(round(ratio * F)))
+    mask = np.zeros((n_nodes, F), bool)
+    for i in range(n_nodes):
+        mask[i, rng.choice(F, size=k, replace=False)] = True
+    return mask
+
+
+def grow_tree(forest: Forest, t: int, binned: BinnedFeatures, X_raw: np.ndarray,
+              stats: np.ndarray, active: np.ndarray,
+              leaf_fn: Callable[[np.ndarray], np.ndarray],
+              params: GrowthParams, rng: np.random.Generator,
+              num_lo: np.ndarray | None = None,
+              num_hi: np.ndarray | None = None) -> np.ndarray:
+    """Grow tree `t` in place. `active`: (N,) bool/float example weights > 0
+    mask; `stats` must already include bagging weights. Returns the final
+    ``node_of`` array ((N,) int32, -1 for inactive examples) so boosting can
+    read leaf assignments without re-traversal."""
+    sp = params.splitter
+    N = binned.codes.shape[0]
+    node_of = np.where(active, 0, -1).astype(np.int32)
+    root_stats = stats[active].sum(0)
+    forest.leaf_value[t, 0] = leaf_fn(root_stats)
+    forest.n_nodes[t] = 1
+    if params.growing_strategy == "BEST_FIRST_GLOBAL":
+        depth = _grow_best_first(forest, t, binned, X_raw, stats, node_of,
+                                 params, rng, leaf_fn, num_lo, num_hi)
+    else:
+        depth = _grow_level_wise(forest, t, binned, X_raw, stats, node_of,
+                                 params, rng, leaf_fn, num_lo, num_hi)
+    forest.depth = max(forest.depth, depth)
+    return node_of
+
+
+def _node_best_split(hist_slice, binned, sp, rng, X_raw, stats, node_of_c,
+                     n_slots, num_lo, num_hi, mask=None) -> list[Split]:
+    splits = best_splits(hist_slice, binned, sp, rng, feature_mask=mask)
+    if sp.oblique and num_lo is not None:
+        Fn = (~binned.is_cat).sum()
+        if Fn:
+            num_cols = np.where(~binned.is_cat)[0]
+            obl = oblique_splits(X_raw[:, num_cols], num_lo, num_hi, stats,
+                                 node_of_c, n_slots, sp, rng)
+            for i in range(n_slots):
+                if obl[i].gain > splits[i].gain:
+                    o = obl[i]
+                    # remap feature indices back to full-matrix columns
+                    o.obl_features = num_cols[o.obl_features].astype(np.int32)
+                    splits[i] = o
+    return splits
+
+
+def _grow_level_wise(forest, t, binned, X_raw, stats, node_of, params, rng,
+                     leaf_fn, num_lo, num_hi) -> int:
+    sp = params.splitter
+    F = binned.n_features
+    frontier = [0]
+    depth = 0
+    for level in range(params.max_depth):
+        if not frontier:
+            break
+        slot_of_node = {n: i for i, n in enumerate(frontier)}
+        slot = np.full(forest.max_nodes, -1, np.int32)
+        for n, i in slot_of_node.items():
+            slot[n] = i
+        node_of_c = np.where(node_of >= 0, slot[np.maximum(node_of, 0)], -1)
+        hist = build_histogram(binned.codes, stats, node_of_c, len(frontier))
+        mask = _feature_sample_mask(len(frontier), F, sp.num_candidate_ratio, rng)
+        splits = _node_best_split(hist, binned, sp, rng, X_raw, stats,
+                                  node_of_c, len(frontier), num_lo, num_hi, mask)
+        new_frontier = []
+        for i, node in enumerate(frontier):
+            s = splits[i]
+            if not s.valid or forest.n_nodes[t] + 2 > params.max_nodes:
+                continue
+            left = int(forest.n_nodes[t])
+            forest.n_nodes[t] += 2
+            _set_split(forest, t, node, s, binned)
+            forest.left_child[t, node] = left
+            idx = np.where(node_of == node)[0]
+            go = apply_split(s, binned, X_raw, idx)
+            node_of[idx] = np.where(go, left + 1, left)
+            for child, sel in ((left, ~go), (left + 1, go)):
+                cs = stats[idx[sel]].sum(0)
+                forest.leaf_value[t, child] = leaf_fn(cs)
+                new_frontier.append(child)
+            depth = level + 1
+        frontier = new_frontier
+    return depth
+
+
+def _grow_best_first(forest, t, binned, X_raw, stats, node_of, params, rng,
+                     leaf_fn, num_lo, num_hi) -> int:
+    """Leaf-wise growth. Heap holds (-gain, node, depth, Split)."""
+    sp = params.splitter
+    F = binned.n_features
+
+    def eval_node(node: int) -> Split:
+        mask01 = (node_of == node).astype(np.int32)
+        node_of_c = np.where(mask01 > 0, 0, -1).astype(np.int32)
+        hist = build_histogram(binned.codes, stats, node_of_c, 1)
+        m = _feature_sample_mask(1, F, sp.num_candidate_ratio, rng)
+        return _node_best_split(hist, binned, sp, rng, X_raw, stats, node_of_c,
+                                1, num_lo, num_hi, m)[0]
+
+    heap: list = []
+    counter = 0
+    s0 = eval_node(0)
+    if s0.valid:
+        heapq.heappush(heap, (-s0.gain, counter, 0, 0, s0))
+        counter += 1
+    depth = 0
+    while heap and forest.n_nodes[t] + 2 <= params.max_nodes:
+        ngain, _, node, d, s = heapq.heappop(heap)
+        left = int(forest.n_nodes[t])
+        forest.n_nodes[t] += 2
+        _set_split(forest, t, node, s, binned)
+        forest.left_child[t, node] = left
+        idx = np.where(node_of == node)[0]
+        go = apply_split(s, binned, X_raw, idx)
+        node_of[idx] = np.where(go, left + 1, left)
+        depth = max(depth, d + 1)
+        for child in (left, left + 1):
+            cidx = np.where(node_of == child)[0]
+            forest.leaf_value[t, child] = leaf_fn(stats[cidx].sum(0))
+            if d + 1 < params.max_depth and len(cidx) >= 2 * sp.min_examples:
+                cs = eval_node(child)
+                if cs.valid:
+                    heapq.heappush(heap, (-cs.gain, counter, child, d + 1, cs))
+                    counter += 1
+    return depth

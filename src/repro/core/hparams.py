@@ -1,0 +1,123 @@
+"""Hyper-parameters with paper-exact defaults (App. C.1) and versioned
+templates (§3.11): defaults never change; newer methods are opt-in; templates
+like ``benchmark_rank1@v1`` bundle the best-known settings per version.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.core.api import YdfError
+
+
+@dataclass(frozen=True)
+class GBTHparams:
+    num_trees: int = 300
+    # -- App C.1 "Gradient Boosted Trees hyper-parameters"
+    early_stopping: str = "LOSS_INCREASE"   # LOSS_INCREASE | NONE
+    l1_regularization: float = 0.0
+    l2_regularization: float = 0.0
+    max_depth: int = 6
+    num_candidate_attributes_ratio: float = 1.0   # -1 i.e. all
+    shrinkage: float = 0.1
+    subsample: float = 1.0                  # sampling_method: NONE
+    use_hessian_gain: bool = False
+    growing_strategy: str = "LOCAL"         # LOCAL | BEST_FIRST_GLOBAL
+    categorical_algorithm: str = "CART"     # CART | RANDOM | ONE_HOT
+    split_axis: str = "AXIS_ALIGNED"        # AXIS_ALIGNED | SPARSE_OBLIQUE
+    sparse_oblique_normalization: str = "MIN_MAX"
+    sparse_oblique_num_projections_exponent: float = 1.0
+    # non-C.1 plumbing
+    min_examples: int = 5
+    max_num_nodes: int = 256                # BEST_FIRST_GLOBAL budget
+    validation_ratio: float = 0.1
+    early_stopping_patience: int = 30       # trees without improvement
+    max_bins: int = 255
+    loss: str = "DEFAULT"                   # DEFAULT | BINOMIAL | MULTINOMIAL | SQUARED_ERROR
+
+
+@dataclass(frozen=True)
+class RFHparams:
+    num_trees: int = 300
+    # -- App C.1 "Random Forest default hyper-parameters"
+    categorical_algorithm: str = "CART"
+    growing_strategy: str = "LOCAL"
+    max_depth: int = 16
+    min_examples: int = 5
+    num_candidate_attributes: str = "SQRT"  # Breiman rule of thumb | "ALL" | float ratio
+    split_axis: str = "AXIS_ALIGNED"
+    sparse_oblique_normalization: str = "MIN_MAX"
+    sparse_oblique_num_projections_exponent: float = 1.0
+    # non-C.1 plumbing
+    bootstrap: bool = True
+    winner_take_all: bool = True
+    compute_oob: bool = True
+    max_num_nodes: int = 4096
+    max_bins: int = 255
+
+
+@dataclass(frozen=True)
+class CartHparams:
+    max_depth: int = 16
+    min_examples: int = 5
+    categorical_algorithm: str = "CART"
+    validation_ratio: float = 0.1           # for pruning
+    max_num_nodes: int = 4096
+    max_bins: int = 255
+
+
+# ---------------------------------------------------------------- templates
+
+_TEMPLATES: dict[tuple[str, str], dict] = {
+    # paper App C.1 "rank1@v1": same as defaults with these changes
+    ("GRADIENT_BOOSTED_TREES", "benchmark_rank1@v1"): dict(
+        growing_strategy="BEST_FIRST_GLOBAL",
+        categorical_algorithm="RANDOM",
+        split_axis="SPARSE_OBLIQUE",
+        sparse_oblique_normalization="MIN_MAX",
+        sparse_oblique_num_projections_exponent=1.0,
+    ),
+    ("RANDOM_FOREST", "benchmark_rank1@v1"): dict(
+        categorical_algorithm="RANDOM",
+        split_axis="SPARSE_OBLIQUE",
+        sparse_oblique_normalization="MIN_MAX",
+        sparse_oblique_num_projections_exponent=1.0,
+    ),
+}
+# unversioned alias -> latest version (version pinning keeps old behaviour)
+_LATEST = {"benchmark_rank1": "benchmark_rank1@v1"}
+
+
+def apply_template(learner_name: str, hp, template: str | None):
+    if not template:
+        return hp
+    template = _LATEST.get(template, template)
+    key = (learner_name, template)
+    if key not in _TEMPLATES:
+        avail = sorted(t for (l, t) in _TEMPLATES if l == learner_name)
+        raise YdfError(
+            f"Unknown hyper-parameter template {template!r} for {learner_name}. "
+            f"Available templates: {avail}.")
+    return dataclasses.replace(hp, **_TEMPLATES[key])
+
+
+# -------------------------------------------------- tuner search spaces (C.2)
+
+GBT_SEARCH_SPACE = {
+    "min_examples": [2, 5, 7, 10],
+    "categorical_algorithm": ["CART", "RANDOM"],
+    "split_axis": ["AXIS_ALIGNED", "SPARSE_OBLIQUE"],
+    "use_hessian_gain": [True, False],
+    "shrinkage": [0.02, 0.05, 0.10, 0.15],
+    "num_candidate_attributes_ratio": [0.2, 0.5, 0.9, 1.0],
+    "growing_strategy": ["LOCAL", "BEST_FIRST_GLOBAL"],
+    "max_depth": [3, 4, 6, 8],
+    "max_num_nodes": [16, 32, 64, 128, 256],
+}
+
+RF_SEARCH_SPACE = {
+    "min_examples": [2, 5, 7, 10],
+    "categorical_algorithm": ["CART", "RANDOM"],
+    "split_axis": ["AXIS_ALIGNED", "SPARSE_OBLIQUE"],
+    "max_depth": [12, 16, 20, 30],
+}

@@ -1,0 +1,313 @@
+"""Meta-Learners (paper §3.2): Learners that wrap other Learners.
+
+All four of the paper's examples, each itself a Learner (so they compose —
+Fig. 3's calibrator(ensembler(tuner(RF), GBT)) works):
+
+  * HyperParameterTuner — random search over a space (App. C.2), scored by
+    cross-validation or train-valid, optimizing loss or accuracy.
+  * Ensembler           — averages the predictions of several Learners.
+  * Calibrator          — Platt-scales a base Learner's scores on a held-out
+    validation split.
+  * FeatureSelector     — greedy backward feature elimination using the
+    model's Self-Evaluation (§3.6: OOB for RF, validation for GBT).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core.api import Learner, Model, Task, YdfError, register_learner
+from repro.core.dataspec import VerticalDataset, label_values
+from repro.core.evaluation import evaluate_predictions
+from repro.core.models import _as_vertical
+
+
+def _subset(ds: VerticalDataset, idx: np.ndarray) -> VerticalDataset:
+    return ds.subset(idx)
+
+
+def kfold_indices(n: int, k: int, seed: int) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Fold splits consistent across learners for fair comparison (§5.2)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    folds = np.array_split(perm, k)
+    out = []
+    for i in range(k):
+        va = np.sort(folds[i])
+        tr = np.sort(np.concatenate([folds[j] for j in range(k) if j != i]))
+        out.append((tr, va))
+    return out
+
+
+def _score_model(model: Model, ds: VerticalDataset, metric: str) -> float:
+    """Higher is better."""
+    ev = model.evaluate(ds)
+    if metric == "accuracy":
+        return ev.metrics["accuracy"]
+    if metric == "loss":
+        key = "logloss" if model.task == Task.CLASSIFICATION else "rmse"
+        return -ev.metrics[key]
+    raise YdfError(f"Unknown tuner metric {metric!r}; use 'loss' or 'accuracy'.")
+
+
+class MetaLearner(Learner):
+    """Base: meta-learners have no own hparams dataclass."""
+
+    def default_hparams(self):
+        return dataclasses.make_dataclass("Empty", [])()
+
+
+@register_learner("HYPERPARAMETER_TUNER")
+class HyperParameterTuner(MetaLearner):
+    """Random-search tuner. The evaluation protocol is itself a
+    hyper-parameter of the tuner (paper §3.2): 'train-valid' or 'cv'."""
+
+    def __init__(self, base_factory: Callable[..., Learner], space: dict[str, list],
+                 *, label: str, task: Task = Task.CLASSIFICATION,
+                 n_trials: int = 30, metric: str = "loss",
+                 protocol: str = "train-valid", cv_folds: int = 5,
+                 valid_ratio: float = 0.2, seed: int = 1234):
+        super().__init__(label, task, seed=seed)
+        self.base_factory = base_factory
+        self.space = space
+        self.n_trials = n_trials
+        self.metric = metric
+        self.protocol = protocol
+        self.cv_folds = cv_folds
+        self.valid_ratio = valid_ratio
+
+    def _sample(self, rng) -> dict:
+        return {k: v[rng.integers(0, len(v))] for k, v in self.space.items()}
+
+    def train(self, dataset, valid=None) -> Model:
+        ds = _as_vertical(dataset)
+        rng = np.random.default_rng(self.seed)
+        n = ds.n_rows
+        trials: list[dict] = []
+        seen = set()
+        for _ in range(self.n_trials * 5):
+            if len(trials) >= self.n_trials:
+                break
+            hp = self._sample(rng)
+            key = tuple(sorted(hp.items()))
+            if key not in seen:
+                seen.add(key)
+                trials.append(hp)
+
+        if self.protocol == "cv":
+            folds = kfold_indices(n, self.cv_folds, self.seed)
+        else:
+            tr, va = kfold_indices(n, max(2, int(round(1 / self.valid_ratio))),
+                                   self.seed)[0]
+            folds = [(tr, va)]
+
+        best_score, best_hp = -np.inf, None
+        log = []
+        for hp in trials:
+            scores = []
+            for tr, va in folds:
+                learner = self.base_factory(label=self.label, task=self.task,
+                                            seed=self.seed, **hp)
+                model = learner.train(_subset(ds, tr))
+                scores.append(_score_model(model, _subset(ds, va), self.metric))
+            s = float(np.mean(scores))
+            log.append({"hparams": hp, "score": s})
+            if s > best_score:
+                best_score, best_hp = s, hp
+        if best_hp is None:
+            raise YdfError("Hyper-parameter tuning produced no trials; "
+                           "check the search space.")
+        final = self.base_factory(label=self.label, task=self.task,
+                                  seed=self.seed, **best_hp)
+        model = final.train(ds, valid)
+        model.tuning_logs = {"best": best_hp, "score": best_score, "trials": log}
+        return model
+
+
+@register_learner("ENSEMBLER")
+class Ensembler(MetaLearner):
+    def __init__(self, learners: Sequence[Learner], *, label: str,
+                 task: Task = Task.CLASSIFICATION, seed: int = 1234):
+        super().__init__(label, task, seed=seed)
+        self.learners = list(learners)
+        if not self.learners:
+            raise YdfError("Ensembler requires at least one sub-learner.")
+
+    def train(self, dataset, valid=None) -> "EnsembleModel":
+        ds = _as_vertical(dataset)
+        models = [l.train(ds, valid) for l in self.learners]
+        m0 = models[0]
+        return EnsembleModel(models=models, label=self.label, task=self.task,
+                             classes=getattr(m0, "classes", None))
+
+
+class EnsembleModel(Model):
+    def __init__(self, *, models, label, task, classes):
+        self.models, self.label, self.task, self.classes = models, label, task, classes
+
+    def predict(self, dataset) -> np.ndarray:
+        preds = [m.predict(dataset) for m in self.models]
+        return np.mean(preds, axis=0)
+
+
+@register_learner("CALIBRATOR")
+class Calibrator(MetaLearner):
+    """Platt scaling of a binary classifier's score on a held-out split."""
+
+    def __init__(self, base: Learner, *, label: str,
+                 task: Task = Task.CLASSIFICATION, valid_ratio: float = 0.2,
+                 seed: int = 1234):
+        super().__init__(label, task, seed=seed)
+        self.base = base
+        self.valid_ratio = valid_ratio
+
+    def train(self, dataset, valid=None) -> "CalibratedModel":
+        ds = _as_vertical(dataset)
+        if valid is None:
+            from repro.core.models import extract_validation
+            tr, va = extract_validation(ds.n_rows, self.valid_ratio, self.seed)
+            train_ds, valid_ds = _subset(ds, tr), _subset(ds, va)
+        else:
+            train_ds, valid_ds = ds, _as_vertical(valid, ds.spec)
+        base_model = self.base.train(train_ds)
+        p = base_model.predict(valid_ds)
+        if p.ndim != 2 or p.shape[1] != 2:
+            raise YdfError("Calibrator supports binary classification models "
+                           f"(got predictions of shape {np.shape(p)}).")
+        y = label_values(base_model, valid_ds)
+        score = np.log(np.clip(p[:, 1], 1e-9, 1) / np.clip(1 - p[:, 1], 1e-9, 1))
+        a, b = _platt_fit(score, y)
+        return CalibratedModel(base=base_model, a=a, b=b, label=self.label,
+                               task=self.task, classes=base_model.classes)
+
+
+def _platt_fit(score: np.ndarray, y: np.ndarray, iters: int = 50):
+    """1-D logistic regression p = sigmoid(a*score + b) by Newton iterations.
+    Uses Platt's smoothed targets t+=(n+ +1)/(n+ +2), t-=1/(n- +2) so the fit
+    cannot diverge on a separable validation set."""
+    n_pos, n_neg = float((y == 1).sum()), float((y != 1).sum())
+    t_pos, t_neg = (n_pos + 1) / (n_pos + 2), 1.0 / (n_neg + 2)
+    y = np.where(y == 1, t_pos, t_neg)
+    lam = 1e-3  # ridge: keeps the optimum finite and Newton stable
+    a, b = 1.0, 0.0
+    for _ in range(iters):
+        z = np.clip(a * score + b, -35, 35)
+        p = 1 / (1 + np.exp(-z))
+        g = p - y
+        ga, gb = (g * score).sum() + lam * a, g.sum() + lam * b
+        h = np.maximum(p * (1 - p), 1e-9)
+        haa = (h * score * score).sum() + lam
+        hab = (h * score).sum()
+        hbb = h.sum() + lam
+        det = haa * hbb - hab * hab
+        if abs(det) < 1e-12:
+            break
+        da = (hbb * ga - hab * gb) / det
+        db = (haa * gb - hab * ga) / det
+        # damp oversized Newton steps (separable-ish validation sets)
+        norm = abs(da) + abs(db)
+        if norm > 10.0:
+            da, db = da * 10.0 / norm, db * 10.0 / norm
+        a, b = a - da, b - db
+        if norm < 1e-10:
+            break
+    return float(a), float(b)
+
+
+class CalibratedModel(Model):
+    def __init__(self, *, base, a, b, label, task, classes):
+        self.base, self.a, self.b = base, a, b
+        self.label, self.task, self.classes = label, task, classes
+
+    def predict(self, dataset) -> np.ndarray:
+        p = self.base.predict(dataset)
+        score = np.log(np.clip(p[:, 1], 1e-9, 1) / np.clip(1 - p[:, 1], 1e-9, 1))
+        p1 = 1 / (1 + np.exp(-np.clip(self.a * score + self.b, -35, 35)))
+        return np.stack([1 - p1, p1], 1)
+
+
+@register_learner("FEATURE_SELECTOR")
+class FeatureSelector(MetaLearner):
+    """Greedy backward elimination scored by the model's Self-Evaluation
+    (OOB for RF — the paper's §3.6 example)."""
+
+    def __init__(self, base_factory: Callable[..., Learner], *, label: str,
+                 task: Task = Task.CLASSIFICATION, max_removals: int | None = None,
+                 seed: int = 1234):
+        super().__init__(label, task, seed=seed)
+        self.base_factory = base_factory
+        self.max_removals = max_removals
+
+    def train(self, dataset, valid=None) -> Model:
+        ds = _as_vertical(dataset)
+        features = ds.spec.feature_names(self.label)
+
+        def fit(feats: list[str]) -> Model:
+            learner = self.base_factory(label=self.label, task=self.task,
+                                        seed=self.seed)
+            return learner.train_with_features(ds, feats) \
+                if hasattr(learner, "train_with_features") else \
+                _train_on_features(learner, ds, feats)
+
+        best_model = fit(features)
+        best_score = _self_eval_score(best_model)
+        removed = []
+        max_rm = self.max_removals or max(0, len(features) - 1)
+        improved = True
+        while improved and len(features) > 1 and len(removed) < max_rm:
+            improved = False
+            # try dropping the k least-important features (NUM_NODES)
+            vi = best_model.variable_importances().get("NUM_NODES", {})
+            cands = sorted(features, key=lambda f: vi.get(f, 0.0))[:3]
+            trials = []
+            for cand in cands:
+                trial_feats = [f for f in features if f != cand]
+                m = fit(trial_feats)
+                trials.append((_self_eval_score(m), cand, m, trial_feats))
+            s, cand, m, trial_feats = max(trials, key=lambda t: t[0])
+            if s >= best_score:
+                best_model, best_score = m, s
+                features = trial_feats
+                removed.append(cand)
+                improved = True
+        best_model.selected_features = features
+        best_model.removed_features = removed
+        return best_model
+
+
+def _train_on_features(learner: Learner, ds: VerticalDataset,
+                       feats: list[str]) -> Model:
+    keep = set(feats) | {learner.label}
+    sub = VerticalDataset(
+        spec=dataclasses.replace(
+            ds.spec, columns={k: v for k, v in ds.spec.columns.items() if k in keep}),
+        numerical={k: v for k, v in ds.numerical.items() if k in keep},
+        categorical={k: v for k, v in ds.categorical.items() if k in keep},
+        n_rows=ds.n_rows)
+    return learner.train(sub)
+
+
+def _self_eval_score(model: Model) -> float:
+    ev = getattr(model, "self_evaluation", None)
+    if ev is None:
+        raise YdfError(
+            "FeatureSelector requires a base learner with Self-Evaluation "
+            "(RF out-of-bag or GBT validation). Enable compute_oob / "
+            "early_stopping on the base learner.")
+    return ev.primary
+
+
+# --------------------------------------------------------------- CV utility
+
+def cross_validate(make_learner: Callable[[], Learner], dataset, k: int = 10,
+                   seed: int = 1234) -> list:
+    """Technology-agnostic k-fold CV evaluator (a §3.1 'tool over Learners')."""
+    ds = _as_vertical(dataset)
+    evals = []
+    for tr, va in kfold_indices(ds.n_rows, k, seed):
+        model = make_learner().train(_subset(ds, tr))
+        evals.append(model.evaluate(_subset(ds, va)))
+    return evals

@@ -1,0 +1,222 @@
+"""Decision-forest Model implementations + shared training-preparation.
+
+``DecisionForestModel`` holds a Forest SoA, the training DataSpec and feature
+list, and routes ``predict`` through a (lossily) compiled inference engine
+(§3.7) — see repro/core/engines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from repro.core.api import Model, Task, YdfError
+from repro.core.binning import BinnedFeatures, bin_features
+from repro.core.dataspec import (
+    DataSpec,
+    Semantic,
+    VerticalDataset,
+    check_classification_label,
+    dataset_from_raw,
+    encode_dataset,
+    infer_dataspec,
+)
+from repro.core.evaluation import Evaluation
+from repro.core.tree import Forest, aggregate_gbt, aggregate_rf
+
+
+# ---------------------------------------------------------------- prep
+
+@dataclass
+class TrainData:
+    ds: VerticalDataset
+    features: list[str]
+    binned: BinnedFeatures
+    X_raw: np.ndarray          # (N, F) float32: raw numerical values / cat codes
+    y: np.ndarray              # class idx (0-based) or float target
+    w: np.ndarray              # example weights
+    n_classes: int
+    classes: list[str] | None
+    num_lo: np.ndarray         # per numerical feature: min (oblique min-max)
+    num_hi: np.ndarray
+
+
+def _as_vertical(dataset, spec: DataSpec | None = None) -> VerticalDataset:
+    if isinstance(dataset, VerticalDataset):
+        return dataset
+    if spec is not None:
+        return encode_dataset(dataset, spec)
+    return dataset_from_raw(dataset)
+
+
+def raw_matrix(ds: VerticalDataset, features: list[str]) -> np.ndarray:
+    """Raw-value matrix with GLOBAL imputation from the dataspec (mean /
+    most-frequent==code 1, since dictionaries are frequency-ordered)."""
+    N = ds.n_rows
+    X = np.zeros((N, len(features)), np.float32)
+    for j, name in enumerate(features):
+        col = ds.spec[name]
+        if col.semantic == Semantic.NUMERICAL:
+            v = ds.numerical[name].astype(np.float32).copy()
+            v[np.isnan(v)] = np.float32(col.mean)
+            X[:, j] = v
+        else:
+            v = ds.categorical[name].astype(np.float32).copy()
+            fill = 1.0 if col.vocab_size > 1 else 0.0
+            v[v < 0] = fill
+            X[:, j] = v
+    return X
+
+
+def prepare_train_data(learner, dataset, *, features: list[str] | None = None,
+                       max_bins: int = 255) -> TrainData:
+    ds = _as_vertical(dataset)
+    label = learner.label
+    if label not in ds.spec.columns:
+        raise YdfError(
+            f'Label column "{label}" not found in the training dataset. '
+            f"Available columns: {sorted(ds.spec.columns)}.")
+    feats = ds.spec.feature_names(label, features)
+    col = ds.spec[label]
+    if learner.task == Task.CLASSIFICATION:
+        check_classification_label(col, learner.task)
+        classes = col.vocab[1:]
+        n_classes = len(classes)
+        if n_classes < 2:
+            raise YdfError(
+                f"{learner.task.value} training (task=CLASSIFICATION) requires "
+                f'a label with >= 2 classes, however {n_classes} classe(s) were '
+                f'found in the label column "{label}": {classes}. Possible '
+                "solutions: (1) use a training dataset with more label "
+                "diversity, or (2) use task=REGRESSION for numerical targets.")
+        y_enc = ds.categorical[label]
+        if (y_enc <= 0).any():
+            raise YdfError(
+                f'Label column "{label}" has missing/out-of-dictionary values '
+                "in the training set; every training example must be labeled.")
+        y = (y_enc - 1).astype(np.int32)
+    else:
+        if col.semantic != Semantic.NUMERICAL:
+            raise YdfError(
+                f'Regression training requires a NUMERICAL label, but "{label}" '
+                f"is {col.semantic.value}. Solution: use task=CLASSIFICATION.")
+        y = ds.numerical[label].astype(np.float64)
+        if np.isnan(y).any():
+            raise YdfError(f'Regression label "{label}" contains missing values.')
+        classes, n_classes = None, 0
+    binned = bin_features(ds, feats, max_bins=max_bins)
+    X_raw = raw_matrix(ds, feats)
+    num_cols = np.where(~binned.is_cat)[0]
+    if len(num_cols) and ds.n_rows:
+        num_lo = X_raw[:, num_cols].min(0).astype(np.float32)
+        num_hi = X_raw[:, num_cols].max(0).astype(np.float32)
+    else:
+        num_lo = np.zeros(len(num_cols), np.float32)
+        num_hi = np.ones(len(num_cols), np.float32)
+    w = np.ones(ds.n_rows, np.float64)
+    return TrainData(ds=ds, features=feats, binned=binned, X_raw=X_raw, y=y,
+                     w=w, n_classes=n_classes, classes=classes,
+                     num_lo=num_lo, num_hi=num_hi)
+
+
+def extract_validation(n: int, ratio: float, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Deterministic train/valid index split (paper §3.3: learners extract
+    their own validation set when none is provided)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    n_valid = int(round(n * ratio))
+    return np.sort(perm[n_valid:]), np.sort(perm[:n_valid])
+
+
+# ---------------------------------------------------------------- model
+
+class DecisionForestModel(Model):
+    def __init__(self, *, forest: Forest, spec: DataSpec, features: list[str],
+                 label: str, task: Task, classes: list[str] | None,
+                 self_evaluation: Evaluation | None = None):
+        self.forest = forest
+        self.spec = spec
+        self.features = features
+        self.label = label
+        self.task = task
+        self.classes = classes
+        self.self_evaluation = self_evaluation
+        self._engine = None
+
+    # -------- engines (§3.7)
+    def compile(self, engine: str | None = None):
+        from repro.core.engines import compile_model
+        self._engine = compile_model(self, engine)
+        return self._engine
+
+    def __getstate__(self):
+        # engines are runtime artifacts (closures over device buffers) and are
+        # recompiled on load — exactly the Model/engine split of §3.7
+        state = dict(self.__dict__)
+        state["_engine"] = None
+        return state
+
+    def _scores(self, dataset) -> np.ndarray:
+        """(N, T, out_dim) per-tree outputs via the selected engine."""
+        if self._engine is None:
+            self.compile()
+        ds = _as_vertical(dataset, self.spec)
+        X = raw_matrix(ds, self.features)
+        return self._engine.per_tree(X)
+
+    def summary(self) -> str:
+        c = self.forest.node_counts()
+        lines = [f"Type: {type(self).__name__}",
+                 f"Task: {self.task.value}", f'Label: "{self.label}"',
+                 f"Input Features ({len(self.features)}): {self.features}",
+                 f"Number of trees: {c['n_trees']}",
+                 f"Total number of nodes: {c['total_nodes']}",
+                 f"Max depth: {self.forest.depth}"]
+        vi = self.variable_importances()
+        for kind, table in vi.items():
+            top = sorted(table.items(), key=lambda kv: -kv[1])[:5]
+            lines.append(f"Variable Importance {kind}: "
+                         + ", ".join(f'"{k}" {v:g}' for k, v in top))
+        if self.self_evaluation is not None:
+            lines.append("Self-evaluation: "
+                         + f"{self.self_evaluation.source}: "
+                         + ", ".join(f"{k}={v:.4g}" for k, v in
+                                     self.self_evaluation.metrics.items()
+                                     if isinstance(v, float)))
+        return "\n".join(lines)
+
+    def variable_importances(self) -> dict[str, dict[str, float]]:
+        return self.forest.variable_importances()
+
+
+class GradientBoostedTreesModel(DecisionForestModel):
+    def __init__(self, *, loss, **kw):
+        super().__init__(**kw)
+        self.loss = loss
+
+    def predict(self, dataset) -> np.ndarray:
+        per_tree = self._scores(dataset)
+        scores = aggregate_gbt(per_tree, self.forest)
+        return self.loss.activation(scores)
+
+    def predict_scores(self, dataset) -> np.ndarray:
+        return aggregate_gbt(self._scores(dataset), self.forest)
+
+
+class RandomForestModel(DecisionForestModel):
+    def __init__(self, *, winner_take_all: bool = True, **kw):
+        super().__init__(**kw)
+        self.winner_take_all = winner_take_all
+
+    def predict(self, dataset) -> np.ndarray:
+        per_tree = self._scores(dataset)
+        out = aggregate_rf(per_tree, self.winner_take_all and
+                           self.task == Task.CLASSIFICATION)
+        if self.task == Task.REGRESSION:
+            return out[:, 0]
+        return out
+
+
+class CartModel(RandomForestModel):
+    pass

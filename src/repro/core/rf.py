@@ -1,0 +1,109 @@
+"""Random Forest learner (Breiman 2001): bootstrap bagging, per-node attribute
+sampling (sqrt rule default), deep trees, winner-take-all voting, and
+out-of-bag Self-Evaluation (§3.6).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.api import Learner, Task, YdfError, register_learner
+from repro.core.evaluation import evaluate_predictions
+from repro.core.grower import GrowthParams, grow_tree
+from repro.core.hparams import RFHparams, apply_template
+from repro.core.models import RandomForestModel, prepare_train_data
+from repro.core.splitters import SplitterParams
+from repro.core.tree import empty_forest, predict_raw
+
+
+@register_learner("RANDOM_FOREST")
+class RandomForestLearner(Learner):
+    def __init__(self, label: str, task: Task = Task.CLASSIFICATION, *,
+                 seed: int = 1234, template: str | None = None, **hparams):
+        super().__init__(label, task, seed=seed, **hparams)
+        self.hparams = apply_template("RANDOM_FOREST", self.hparams, template)
+
+    def default_hparams(self) -> RFHparams:
+        return RFHparams()
+
+    def train(self, dataset, valid=None) -> RandomForestModel:
+        hp: RFHparams = self.hparams
+        rng = np.random.default_rng(self.seed)
+        td = prepare_train_data(self, dataset, max_bins=hp.max_bins)
+        N, F = td.binned.codes.shape
+        if self.task == Task.CLASSIFICATION:
+            C = td.n_classes
+            stat_kind, out_dim, S = "class", C, C + 1
+            onehot = np.eye(C)[td.y]                     # (N, C)
+            base_stats = np.concatenate([onehot, np.ones((N, 1))], 1)
+
+            def leaf_fn(s):
+                tot = max(s[-1], 1e-12)
+                return (s[:-1] / tot).astype(np.float32)
+        else:
+            stat_kind, out_dim, S = "moment", 1, 3
+            base_stats = np.stack([td.y, np.square(td.y), np.ones(N)], 1)
+
+            def leaf_fn(s):
+                return np.array([s[0] / max(s[-1], 1e-12)], np.float32)
+
+        if hp.num_candidate_attributes == "SQRT":
+            ratio = min(1.0, np.sqrt(F) / F)  # Breiman rule of thumb
+        elif hp.num_candidate_attributes == "ALL":
+            ratio = 1.0
+        else:
+            ratio = float(hp.num_candidate_attributes)
+        oblique = hp.split_axis == "SPARSE_OBLIQUE"
+        sp = SplitterParams(
+            stat_kind=stat_kind, min_examples=hp.min_examples,
+            categorical_algorithm=hp.categorical_algorithm,
+            num_candidate_ratio=ratio, oblique=oblique,
+            oblique_num_projections_exponent=hp.sparse_oblique_num_projections_exponent)
+        gp = GrowthParams(max_depth=hp.max_depth, max_nodes=hp.max_num_nodes,
+                          growing_strategy=hp.growing_strategy, splitter=sp)
+        n_num = int((~td.binned.is_cat).sum())
+        forest = empty_forest(hp.num_trees, hp.max_num_nodes, out_dim,
+                              oblique_dims=n_num if oblique else 0,
+                              feature_names=td.features)
+        forest.out_dim = out_dim
+        forest.tree_class = None
+        forest.init_pred = np.zeros(out_dim, np.float32)
+
+        oob_sum = np.zeros((N, out_dim), np.float64)
+        oob_cnt = np.zeros(N, np.int64)
+        for t in range(hp.num_trees):
+            if hp.bootstrap:
+                counts = rng.multinomial(N, np.full(N, 1.0 / N)).astype(np.float64)
+            else:
+                counts = np.ones(N)
+            stats = base_stats * counts[:, None]
+            grow_tree(forest, t, td.binned, td.X_raw, stats, counts > 0,
+                      leaf_fn, gp, rng, td.num_lo, td.num_hi)
+            if hp.compute_oob and hp.bootstrap:
+                oob = counts == 0
+                if oob.any():
+                    from repro.core.gbt import _one_tree
+                    pr = predict_raw(_one_tree(forest, t), td.X_raw[oob])[:, 0]
+                    if hp.winner_take_all and out_dim > 1:
+                        vote = np.zeros_like(pr)
+                        vote[np.arange(len(pr)), pr.argmax(1)] = 1.0
+                        pr = vote
+                    oob_sum[oob] += pr
+                    oob_cnt[oob] += 1
+
+        self_eval = None
+        if hp.compute_oob and hp.bootstrap and (oob_cnt > 0).any():
+            seen = oob_cnt > 0
+            preds = oob_sum[seen] / oob_cnt[seen, None]
+            if self.task == Task.CLASSIFICATION:
+                preds = preds / np.maximum(preds.sum(1, keepdims=True), 1e-12)
+                self_eval = evaluate_predictions(
+                    self.task, preds, td.y[seen], classes=td.classes,
+                    source="out-of-bag")
+            else:
+                self_eval = evaluate_predictions(self.task, preds[:, 0],
+                                                 td.y[seen], source="out-of-bag")
+
+        return RandomForestModel(
+            winner_take_all=hp.winner_take_all, forest=forest, spec=td.ds.spec,
+            features=td.features, label=self.label, task=self.task,
+            classes=td.classes, self_evaluation=self_eval)

@@ -1,0 +1,355 @@
+"""Splitters (paper §3.8): find the best condition per frontier node.
+
+The workhorse is the *histogram splitter*: binned codes (uint8) + per-node
+stat histograms + cumulative-sum gain scans. Stat layouts ("label type"
+modules, §2.3):
+
+  * "gh"     — [grad, hess, count]            (GBT, any smooth loss)
+  * "class"  — [count_class_0..C-1, count]    (RF/CART classification)
+  * "moment" — [sum_y, sum_y^2, count]        (RF/CART regression)
+
+Feature-type modules: numerical (ordered-bin scan), categorical CART
+(Fisher-ordered prefix scan), categorical RANDOM (random-set projections,
+Breiman), one-hot (single category vs rest), and sparse oblique numerical
+projections (Tomita et al.). The exact in-sorting splitter is the reference
+oracle (§2.3: the simple module is the ground truth for the optimized ones).
+
+Histogram building: numpy bincount on host; repro/kernels/histogram has the
+one-hot-MXU Pallas kernel + jnp oracle used by the distributed/TPU path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import numpy as np
+
+from repro.core.binning import BinnedFeatures
+from repro.core.tree import MASK_WORDS
+
+NEG_INF = -1e30
+
+
+@dataclass
+class SplitterParams:
+    stat_kind: str = "gh"            # gh | class | moment
+    min_examples: int = 5
+    l2: float = 0.0                  # lambda (gh gain)
+    min_gain: float = 1e-12
+    categorical_algorithm: str = "CART"   # CART | RANDOM | ONE_HOT
+    random_cat_trials: int = 32
+    num_candidate_ratio: float = 1.0  # per-node feature sampling (RF: sqrt rule)
+    # sparse oblique (benchmark_rank1 template)
+    oblique: bool = False
+    oblique_num_projections_exponent: float = 1.0
+    oblique_density: float = 0.5     # P(feature in projection)
+    oblique_bins: int = 128
+
+
+@dataclass
+class Split:
+    """Best split decision for one node. feature == -1 -> no valid split."""
+    gain: float = NEG_INF
+    feature: int = -1
+    split_bin: int = 0                     # numerical: codes >= split_bin go right
+    threshold: float = 0.0                 # raw-value threshold
+    cat_right: np.ndarray | None = None    # categorical: codes going right
+    obl_features: np.ndarray | None = None
+    obl_weights: np.ndarray | None = None
+
+    @property
+    def valid(self) -> bool:
+        return self.feature != -1 or self.obl_features is not None
+
+
+# =====================================================================
+# Histogram building (host path; kernels/histogram is the device path)
+# =====================================================================
+
+def build_histogram(codes: np.ndarray, stats: np.ndarray, node_of: np.ndarray,
+                    n_nodes: int, max_bins: int = 256) -> np.ndarray:
+    """codes: (N, F) uint8; stats: (N, S) float32; node_of: (N,) int32 in
+    [-1, n_nodes) (-1 = inactive example). -> (n_nodes, F, B, S)."""
+    N, F = codes.shape
+    S = stats.shape[1]
+    act = node_of >= 0
+    codes_a = codes[act]
+    stats_a = stats[act]
+    node_a = node_of[act].astype(np.int64)
+    B = max_bins
+    out = np.zeros((n_nodes * F * B, S), np.float64)
+    base = node_a[:, None] * (F * B) + np.arange(F)[None, :] * B  # (n, F)
+    flat = (base + codes_a).ravel()
+    for s in range(S):
+        w = np.broadcast_to(stats_a[:, s:s + 1], (len(node_a), F)).ravel()
+        out[:, s] = np.bincount(flat, weights=w, minlength=n_nodes * F * B)
+    return out.reshape(n_nodes, F, B, S).astype(np.float32)
+
+
+# =====================================================================
+# Gain functions per stat layout
+# =====================================================================
+
+def _score(stats: np.ndarray, kind: str, l2: float) -> np.ndarray:
+    """'Goodness' of a node given aggregated stats (..., S). Gain of a split =
+    score(L) + score(R) - score(P) (all formulations arranged to be additive)."""
+    if kind == "gh":
+        g, h = stats[..., 0], stats[..., 1]
+        return 0.5 * np.square(g) / (h + l2 + 1e-12)
+    if kind == "class":
+        counts = stats[..., :-1]
+        n = stats[..., -1]
+        tot = np.maximum(n, 1e-12)[..., None]
+        p = counts / tot
+        ent = -(p * np.log(np.maximum(p, 1e-12))).sum(-1)
+        return -n * ent  # negative weighted entropy: gain = info gain * n
+    if kind == "moment":
+        sy, sy2, n = stats[..., 0], stats[..., 1], stats[..., 2]
+        return np.square(sy) / np.maximum(n, 1e-12) - 0.0 * sy2  # -SSE + const
+    raise ValueError(kind)
+
+
+def _counts(stats: np.ndarray, kind: str) -> np.ndarray:
+    return stats[..., -1]
+
+
+def _order_key(stats: np.ndarray, kind: str) -> np.ndarray:
+    """Per-bin ordering key for categorical CART (Fisher 1958 grouping)."""
+    n = np.maximum(stats[..., -1], 1e-12)
+    if kind == "gh":
+        return stats[..., 0] / np.maximum(stats[..., 1], 1e-12)
+    if kind == "class":
+        return stats[..., 1] / n  # P(second class); multiclass handled by caller
+    return stats[..., 0] / n      # mean target
+
+
+# =====================================================================
+# Best-split search over a histogram
+# =====================================================================
+
+def best_splits(hist: np.ndarray, binned: BinnedFeatures, params: SplitterParams,
+                rng: np.random.Generator,
+                feature_mask: np.ndarray | None = None) -> list[Split]:
+    """hist: (n_nodes, F, B, S) -> one Split per node (numerical+categorical).
+    feature_mask: optional (n_nodes, F) bool of candidate features per node."""
+    n_nodes, F, B, S = hist.shape
+    kind, l2 = params.stat_kind, params.l2
+    parent = hist.sum(axis=2)                       # (n_nodes, F, S)
+    parent_score = _score(parent, kind, l2)         # (n_nodes, F)
+    n_parent = _counts(parent, kind)
+
+    is_cat = binned.is_cat
+    num_idx = np.where(~is_cat)[0]
+    cat_idx = np.where(is_cat)[0]
+
+    gains = np.full((n_nodes, F), NEG_INF, np.float64)
+    best_bin = np.zeros((n_nodes, F), np.int32)
+    cat_sets: dict[tuple[int, int], np.ndarray] = {}
+
+    # ---- numerical: ordered cumulative scan; split s: bins < s left
+    if len(num_idx):
+        h = hist[:, num_idx]                        # (n, Fn, B, S)
+        cum = np.cumsum(h, axis=2)
+        left = cum[:, :, :-1]                       # split after bin b -> s = b+1
+        right = parent[:, num_idx, None, :] - left
+        g = (_score(left, kind, l2) + _score(right, kind, l2)
+             - parent_score[:, num_idx, None])
+        ok = ((_counts(left, kind) >= params.min_examples)
+              & (_counts(right, kind) >= params.min_examples))
+        g = np.where(ok, g, NEG_INF)
+        bi = np.argmax(g, axis=2)                   # (n, Fn)
+        gains[:, num_idx] = np.take_along_axis(g, bi[..., None], 2)[..., 0]
+        best_bin[:, num_idx] = bi + 1
+
+    # ---- categorical
+    for f in cat_idx:
+        hf = hist[:, f]                             # (n, B, S)
+        nb = int(binned.n_bins[f])
+        hf = hf[:, :nb]
+        if params.categorical_algorithm == "RANDOM":
+            _cat_random(f, hf, parent[:, f], parent_score[:, f], params, rng,
+                        gains, cat_sets)
+        elif params.categorical_algorithm == "ONE_HOT" or (
+                kind == "class" and parent.shape[-1] > 3):
+            _cat_one_hot(f, hf, parent[:, f], parent_score[:, f], params,
+                         gains, cat_sets)
+        else:
+            _cat_cart(f, hf, parent[:, f], parent_score[:, f], params,
+                      gains, cat_sets, kind)
+
+    if feature_mask is not None:
+        gains = np.where(feature_mask, gains, NEG_INF)
+
+    out: list[Split] = []
+    for i in range(n_nodes):
+        j = int(np.argmax(gains[i]))
+        gain = float(gains[i, j])
+        if gain <= params.min_gain or not np.isfinite(gain):
+            out.append(Split())
+            continue
+        if is_cat[j]:
+            out.append(Split(gain=gain, feature=j, cat_right=cat_sets[(i, j)]))
+        else:
+            sb = int(best_bin[i, j])
+            out.append(Split(gain=gain, feature=j, split_bin=sb,
+                             threshold=binned.threshold_value(j, sb)))
+    return out
+
+
+def _cat_cart(f, hf, parent, parent_score, params, gains, cat_sets, kind):
+    """Fisher-ordered prefix scan: sort categories by the order key, then scan
+    prefixes as if ordered (exact for binary/regression)."""
+    n_nodes, nb, S = hf.shape
+    key = _order_key(hf, kind)                      # (n, nb)
+    order = np.argsort(key, axis=1, kind="stable")  # (n, nb)
+    hs = np.take_along_axis(hf, order[..., None], axis=1)
+    cum = np.cumsum(hs, axis=1)[:, :-1]             # prefixes (n, nb-1, S)
+    right = parent[:, None, :] - cum
+    g = (_score(cum, kind, params.l2) + _score(right, kind, params.l2)
+         - parent_score[:, None])
+    ok = ((_counts(cum, kind) >= params.min_examples)
+          & (_counts(right, kind) >= params.min_examples))
+    g = np.where(ok, g, NEG_INF)
+    if g.shape[1] == 0:
+        return
+    bi = np.argmax(g, axis=1)
+    gv = np.take_along_axis(g, bi[:, None], 1)[:, 0]
+    for i in range(n_nodes):
+        if gv[i] > gains[i, f]:
+            gains[i, f] = gv[i]
+            cat_sets[(i, f)] = np.sort(order[i, bi[i] + 1:]).astype(np.int32)
+
+
+def _cat_one_hot(f, hf, parent, parent_score, params, gains, cat_sets):
+    """Single category vs rest (== one-hot encoding splits)."""
+    kind, l2 = params.stat_kind, params.l2
+    left = parent[:, None, :] - hf                  # all but category b
+    g = (_score(hf, kind, l2) + _score(left, kind, l2) - parent_score[:, None])
+    ok = ((_counts(hf, kind) >= params.min_examples)
+          & (_counts(left, kind) >= params.min_examples))
+    g = np.where(ok, g, NEG_INF)
+    bi = np.argmax(g, axis=1)
+    gv = np.take_along_axis(g, bi[:, None], 1)[:, 0]
+    for i in range(hf.shape[0]):
+        if gv[i] > gains[i, f]:
+            gains[i, f] = gv[i]
+            cat_sets[(i, f)] = np.array([bi[i]], np.int32)
+
+
+def _cat_random(f, hf, parent, parent_score, params, rng, gains, cat_sets):
+    """Breiman-style random category subsets (benchmark_rank1 categorical)."""
+    kind, l2 = params.stat_kind, params.l2
+    n_nodes, nb, S = hf.shape
+    T = params.random_cat_trials
+    masks = rng.random((T, nb)) < 0.5               # True -> right
+    right = np.einsum("tb,nbs->nts", masks.astype(np.float64), hf)
+    left = parent[:, None, :] - right
+    g = (_score(left, kind, l2) + _score(right, kind, l2) - parent_score[:, None])
+    ok = ((_counts(left, kind) >= params.min_examples)
+          & (_counts(right, kind) >= params.min_examples))
+    g = np.where(ok, g, NEG_INF)
+    ti = np.argmax(g, axis=1)
+    gv = np.take_along_axis(g, ti[:, None], 1)[:, 0]
+    for i in range(n_nodes):
+        if gv[i] > gains[i, f]:
+            gains[i, f] = gv[i]
+            cat_sets[(i, f)] = np.where(masks[ti[i]])[0].astype(np.int32)
+
+
+# =====================================================================
+# Sparse oblique projections (Tomita et al. 2020; benchmark_rank1 template)
+# =====================================================================
+
+def oblique_splits(Xn: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+                   stats: np.ndarray, node_of: np.ndarray, n_nodes: int,
+                   params: SplitterParams, rng: np.random.Generator) -> list[Split]:
+    """Xn: (N, Fn) numerical features; lo/hi: (Fn,) min-max normalization
+    bounds. Projections use +-1 weights on a sparse feature subset; projected
+    values are linearly binned per projection and scanned like a numerical
+    feature. Returns one (possibly invalid) Split per node."""
+    N, Fn = Xn.shape
+    if Fn == 0:
+        return [Split() for _ in range(n_nodes)]
+    n_proj = max(1, int(round(Fn ** params.oblique_num_projections_exponent)))
+    scale = 1.0 / np.maximum(hi - lo, 1e-12)
+    B = params.oblique_bins
+    out = [Split() for _ in range(n_nodes)]
+    for _ in range(n_proj):
+        nnz = max(1, (rng.random(Fn) < params.oblique_density).sum())
+        feats = rng.choice(Fn, size=min(nnz, Fn), replace=False)
+        w = rng.choice(np.array([-1.0, 1.0]), size=len(feats))
+        proj = ((Xn[:, feats] - lo[feats]) * scale[feats]) @ w  # (N,)
+        pmin, pmax = float(proj.min()), float(proj.max())
+        if pmax - pmin < 1e-12:
+            continue
+        codes = np.minimum(((proj - pmin) * (B / (pmax - pmin))).astype(np.int64),
+                           B - 1).astype(np.uint8)
+        hist = build_histogram(codes[:, None], stats, node_of, n_nodes, B)
+        kind, l2 = params.stat_kind, params.l2
+        h = hist[:, 0]                                  # (n, B, S)
+        parent = h.sum(1)
+        ps = _score(parent, kind, l2)
+        cum = np.cumsum(h, axis=1)[:, :-1]
+        right = parent[:, None, :] - cum
+        g = _score(cum, kind, l2) + _score(right, kind, l2) - ps[:, None]
+        ok = ((_counts(cum, kind) >= params.min_examples)
+              & (_counts(right, kind) >= params.min_examples))
+        g = np.where(ok, g, NEG_INF)
+        if g.shape[1] == 0:
+            continue
+        bi = np.argmax(g, axis=1)
+        gv = np.take_along_axis(g, bi[:, None], 1)[:, 0]
+        for i in range(n_nodes):
+            if gv[i] > max(out[i].gain, params.min_gain):
+                thr = pmin + (int(bi[i]) + 1) * (pmax - pmin) / B
+                # fold min-max normalization into weights/threshold:
+                w_raw = w * scale[feats]
+                t_raw = thr + float((lo[feats] * scale[feats]) @ w)
+                out[i] = Split(gain=float(gv[i]), feature=-2,
+                               obl_features=feats.astype(np.int32),
+                               obl_weights=w_raw.astype(np.float32),
+                               threshold=t_raw)
+    return out
+
+
+# =====================================================================
+# Exact in-sorting splitter — the reference oracle (paper §2.3)
+# =====================================================================
+
+def exact_best_split_numerical(x: np.ndarray, stats: np.ndarray,
+                               params: SplitterParams) -> tuple[float, float]:
+    """Sort values, scan every midpoint. Returns (gain, threshold)."""
+    order = np.argsort(x, kind="stable")
+    xs, ss = x[order], stats[order]
+    kind, l2 = params.stat_kind, params.l2
+    parent = ss.sum(0)
+    ps = _score(parent, kind, l2)
+    cum = np.cumsum(ss, axis=0)[:-1]
+    right = parent[None] - cum
+    g = _score(cum, kind, l2) + _score(right, kind, l2) - ps
+    ok = ((_counts(cum, kind) >= params.min_examples)
+          & (_counts(right, kind) >= params.min_examples)
+          & (xs[:-1] != xs[1:]))  # can't split between equal values
+    g = np.where(ok, g, NEG_INF)
+    if len(g) == 0:
+        return NEG_INF, 0.0
+    i = int(np.argmax(g))
+    thr = 0.5 * (xs[i] + xs[i + 1])
+    return float(g[i]), float(thr)
+
+
+# =====================================================================
+# Partition application
+# =====================================================================
+
+def apply_split(split: Split, binned: BinnedFeatures, X_raw: np.ndarray,
+                idx: np.ndarray) -> np.ndarray:
+    """go-right decision for examples `idx`. X_raw: (N, F) raw-valued matrix
+    (same column order as binned; categorical columns hold codes)."""
+    if split.obl_features is not None:
+        proj = X_raw[np.ix_(idx, split.obl_features)] @ split.obl_weights
+        return proj >= split.threshold
+    codes = binned.codes[idx, split.feature]
+    if split.cat_right is not None:
+        return np.isin(codes, split.cat_right)
+    return codes >= split.split_bin

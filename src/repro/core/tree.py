@@ -1,0 +1,223 @@
+"""Decision forests as structure-of-arrays (SoA) — the TPU-native model format.
+
+Pointer-based compact layout (NOT 2^depth-complete, so deep RF trees don't
+explode): per tree, arrays of capacity ``max_nodes``; children are allocated
+in pairs so ``right = left_child + 1``. Leaves have ``feature == -1``.
+
+Three condition kinds (paper §3.8):
+  * numerical axis-aligned:  x[f] >= threshold
+  * categorical set:         bit f of cat_mask at x[f]  (id-capped to 255)
+  * sparse oblique:          sum_k w_k * x[f_k] >= threshold  (Tomita et al.)
+
+Vectorized inference traverses all (example, tree) pairs in lockstep for
+``depth`` rounds of gathers — branch-free, the QuickScorer insight restated
+for the VPU/MXU (DESIGN.md §2.2). ``predict_*`` here are the readable
+reference engines; repro/kernels/forest_infer holds the Pallas VMEM engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+import numpy as np
+
+MASK_WORDS = 8  # 8 * 32 = 256 category bits
+
+
+@dataclass
+class Forest:
+    """A stack of T trees with capacity M nodes each."""
+    feature: np.ndarray        # (T, M) int32; -1 = leaf, -2 = oblique
+    threshold: np.ndarray      # (T, M) float32 (raw-value domain)
+    split_bin: np.ndarray      # (T, M) uint16 (binned domain, for binned engines)
+    cat_mask: np.ndarray       # (T, M, MASK_WORDS) uint32; bit set -> go right
+    left_child: np.ndarray     # (T, M) int32; -1 = leaf
+    leaf_value: np.ndarray     # (T, M, out_dim) float32
+    n_nodes: np.ndarray        # (T,) int32
+    depth: int                 # max depth over trees
+    # oblique extension (all-zero when unused)
+    obl_weights: np.ndarray | None = None  # (T, M, P) float32
+    obl_features: np.ndarray | None = None # (T, M, P) int32
+    # metadata
+    out_dim: int = 1
+    tree_class: np.ndarray | None = None  # (T,) int32: GBT multiclass tree->class
+    init_pred: np.ndarray | None = None   # (out_dim,) float32 bias (GBT)
+    feature_names: list[str] = field(default_factory=list)
+
+    @property
+    def n_trees(self) -> int:
+        return self.feature.shape[0]
+
+    @property
+    def max_nodes(self) -> int:
+        return self.feature.shape[1]
+
+    def truncated(self, n_trees: int) -> "Forest":
+        sl = lambda a: None if a is None else a[:n_trees]
+        return dataclasses.replace(
+            self, feature=sl(self.feature), threshold=sl(self.threshold),
+            split_bin=sl(self.split_bin), cat_mask=sl(self.cat_mask),
+            left_child=sl(self.left_child), leaf_value=sl(self.leaf_value),
+            n_nodes=sl(self.n_nodes),
+            obl_weights=sl(self.obl_weights), obl_features=sl(self.obl_features),
+            tree_class=sl(self.tree_class))
+
+    # -------------------------------------------------- structure stats
+    def node_counts(self) -> dict:
+        leaves = (self.feature == -1) & _reachable(self)
+        per_tree = leaves.sum(1)
+        return {"n_trees": self.n_trees, "total_nodes": int(self.n_nodes.sum()),
+                "leaves_per_tree_mean": float(per_tree.mean()),
+                "nodes_per_tree_mean": float(self.n_nodes.mean())}
+
+    def variable_importances(self) -> dict[str, dict[str, float]]:
+        """NUM_AS_ROOT and NUM_NODES (paper App. B.2)."""
+        reach = _reachable(self)
+        internal = (self.feature >= 0) & reach
+        num_nodes: dict[str, float] = {}
+        num_root: dict[str, float] = {}
+        for name in self.feature_names:
+            num_nodes[name] = 0.0
+            num_root[name] = 0.0
+        flat = self.feature[internal]
+        for f, c in zip(*np.unique(flat, return_counts=True)):
+            if 0 <= f < len(self.feature_names):
+                num_nodes[self.feature_names[f]] = float(c)
+        roots = self.feature[:, 0]
+        for f, c in zip(*np.unique(roots[roots >= 0], return_counts=True)):
+            num_root[self.feature_names[f]] = float(c)
+        return {"NUM_NODES": num_nodes, "NUM_AS_ROOT": num_root}
+
+
+def _reachable(forest: Forest) -> np.ndarray:
+    reach = np.zeros(forest.feature.shape, bool)
+    reach[:, 0] = True
+    for t in range(forest.n_trees):
+        for i in range(forest.n_nodes[t]):
+            if reach[t, i] and forest.left_child[t, i] >= 0:
+                reach[t, forest.left_child[t, i]] = True
+                reach[t, forest.left_child[t, i] + 1] = True
+    return reach
+
+
+def empty_forest(n_trees: int, max_nodes: int, out_dim: int, *,
+                 oblique_dims: int = 0, feature_names: list[str] | None = None) -> Forest:
+    T, M = n_trees, max_nodes
+    return Forest(
+        feature=np.full((T, M), -1, np.int32),
+        threshold=np.zeros((T, M), np.float32),
+        split_bin=np.zeros((T, M), np.uint16),
+        cat_mask=np.zeros((T, M, MASK_WORDS), np.uint32),
+        left_child=np.full((T, M), -1, np.int32),
+        leaf_value=np.zeros((T, M, out_dim), np.float32),
+        n_nodes=np.ones(T, np.int32),
+        depth=0,
+        obl_weights=np.zeros((T, M, oblique_dims), np.float32) if oblique_dims else None,
+        obl_features=np.zeros((T, M, oblique_dims), np.int32) if oblique_dims else None,
+        out_dim=out_dim,
+        tree_class=np.zeros(T, np.int32),
+        init_pred=np.zeros(out_dim, np.float32),
+        feature_names=list(feature_names or []),
+    )
+
+
+# =====================================================================
+# Reference engines (numpy). See repro/core/engines.py for selection and
+# repro/kernels/forest_infer for the Pallas VMEM engine.
+# =====================================================================
+
+def eval_node_conditions(forest: Forest, X: np.ndarray, t: np.ndarray,
+                         node: np.ndarray) -> np.ndarray:
+    """Branch decision (True = right) for (example, tree) pairs.
+
+    X: (N, 1, F) float32 (categorical features hold integer codes);
+    t, node: (N, T) int arrays.
+    """
+    f = forest.feature[t, node]                       # (N, T)
+    is_leaf = f == -1
+    is_obl = f == -2
+    f_safe = np.maximum(f, 0)
+    x = np.take_along_axis(X, f_safe[..., None], axis=-1)[..., 0]  # (N, T)
+    go = x >= forest.threshold[t, node]
+    # categorical: bit test on the node's category mask
+    cat = forest.cat_mask[t, node]                    # (N, T, MASK_WORDS)
+    code = np.clip(x.astype(np.int64), 0, MASK_WORDS * 32 - 1)
+    word = np.take_along_axis(cat, (code // 32)[..., None], axis=-1)[..., 0]
+    bit = (word >> (code % 32).astype(np.uint32)) & 1
+    go = np.where(cat.any(axis=-1), bit.astype(bool), go)
+    if forest.obl_weights is not None and forest.obl_weights.shape[-1]:
+        w = forest.obl_weights[t, node]               # (N, T, P)
+        fo = forest.obl_features[t, node]             # (N, T, P)
+        xs = np.take_along_axis(np.broadcast_to(X, fo.shape[:2] + X.shape[-1:]),
+                                fo, axis=-1)
+        proj = (w * xs).sum(-1)
+        go = np.where(is_obl, proj >= forest.threshold[t, node], go)
+    return np.where(is_leaf, False, go)
+
+
+def predict_raw(forest: Forest, X: np.ndarray) -> np.ndarray:
+    """Vectorized lockstep traversal. X: (N, F) float32. -> (N, T) leaf scalar
+    (out_dim=1) or (N, T, out_dim)."""
+    N = X.shape[0]
+    T = forest.n_trees
+    t = np.arange(T)[None, :].repeat(N, 0)        # (N, T)
+    node = np.zeros((N, T), np.int64)
+    Xe = X[:, None, :]                             # (N, 1, F) broadcast over trees
+    for _ in range(max(1, forest.depth)):
+        go = eval_node_conditions(forest, Xe, t, node)
+        child = forest.left_child[t, node]
+        nxt = child + go
+        node = np.where(child >= 0, nxt, node)
+    out = forest.leaf_value[t, node]               # (N, T, out_dim)
+    return out
+
+
+def predict_naive(forest: Forest, X: np.ndarray) -> np.ndarray:
+    """Algorithm 1 of the paper: per-example while-loop. The readable oracle."""
+    N = X.shape[0]
+    out = np.zeros((N, forest.n_trees, forest.out_dim), np.float32)
+    for n in range(N):
+        for t in range(forest.n_trees):
+            node = 0
+            while forest.left_child[t, node] >= 0:
+                f = forest.feature[t, node]
+                if f == -2:
+                    proj = float(np.dot(forest.obl_weights[t, node],
+                                        X[n, forest.obl_features[t, node]]))
+                    go = proj >= forest.threshold[t, node]
+                elif forest.cat_mask[t, node].any():
+                    code = int(X[n, f])
+                    code = min(max(code, 0), MASK_WORDS * 32 - 1)
+                    go = bool((forest.cat_mask[t, node, code // 32] >> (code % 32)) & 1)
+                else:
+                    go = X[n, f] >= forest.threshold[t, node]
+                node = forest.left_child[t, node] + int(go)
+            out[n, t] = forest.leaf_value[t, node]
+    return out
+
+
+# ------------------------------------------------------------ aggregation
+
+def aggregate_gbt(per_tree: np.ndarray, forest: Forest) -> np.ndarray:
+    """Sum tree outputs into (N, out_dim) logits/score, adding init_pred."""
+    N, T = per_tree.shape[:2]
+    out = np.tile(forest.init_pred[None, :], (N, 1)).astype(np.float32)
+    if forest.out_dim == 1 or forest.tree_class is None:
+        out += per_tree.sum(axis=1)[:, : forest.out_dim]
+    else:
+        for c in range(forest.out_dim):
+            sel = forest.tree_class == c
+            out[:, c] += per_tree[:, sel, 0].sum(axis=1)
+    return out
+
+
+def aggregate_rf(per_tree: np.ndarray, winner_take_all: bool) -> np.ndarray:
+    """per_tree: (N, T, C) leaf distributions -> (N, C) probabilities."""
+    if winner_take_all and per_tree.shape[-1] > 1:
+        votes = per_tree.argmax(-1)                     # (N, T)
+        C = per_tree.shape[-1]
+        out = np.zeros((per_tree.shape[0], C), np.float32)
+        for c in range(C):
+            out[:, c] = (votes == c).mean(axis=1)
+        return out
+    return per_tree.mean(axis=1)

@@ -1,0 +1,3 @@
+"""Distributed runtime: checkpointing (sharded, resharding restore, async),
+gradient compression, elastic-mesh helpers."""
+from repro.distributed.checkpoint import CheckpointManager  # noqa: F401

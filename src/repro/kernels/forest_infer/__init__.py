@@ -1,0 +1,1 @@
+from repro.kernels.forest_infer.ops import forest_predict  # noqa: F401

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: branch-free forest inference with VMEM-resident trees.
+
+QuickScorer's insight (eliminate branch misprediction + random memory access)
+restated for the TPU (DESIGN.md §2.2): all examples traverse all trees in
+lockstep for `depth` rounds; per round, the per-lane "pointer chase" becomes
+one-hot matmuls against the node table (M <= a few hundred nodes for GBT
+trees), which the MXU executes at full tilt — no gathers, no branches:
+
+    f      = onehot(node, M) @ feature_t        (TN, M) @ (M,)
+    x      = sum(X * onehot(f, F), axis=1)      row-select on the VPU
+    go     = x >= onehot(node, M) @ threshold_t (or category bit test)
+    node   = onehot(node, M) @ left_child_t + go
+
+Grid: (N // TN, T). Per step: X tile (TN, F) + one tree's arrays in VMEM.
+VMEM at TN=256, F<=512, M<=512: X 512KB + onehot 512KB + tree ~20KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MASK_WORDS = 8
+
+
+def _infer_kernel(x_ref, feat_ref, thr_ref, cat_ref, lc_ref, leaf_ref, out_ref,
+                  *, depth: int, n_nodes: int):
+    X = x_ref[...]                                    # (TN, F)
+    feat = feat_ref[...][0].astype(jnp.float32)       # (M,)
+    thr = thr_ref[...][0]                             # (M,)
+    cat = cat_ref[...][0].astype(jnp.float32)         # (M, W)
+    lc = lc_ref[...][0].astype(jnp.float32)           # (M,)
+    leaf = leaf_ref[...][0]                           # (M, O)
+    TN, F = X.shape
+    M = n_nodes
+
+    has_cat = (cat.sum(-1) > 0).astype(jnp.float32)   # (M,)
+    node = jnp.zeros((TN,), jnp.float32)
+
+    for _ in range(max(1, depth)):
+        m_iota = jax.lax.broadcasted_iota(jnp.float32, (TN, M), 1)
+        oh = (node[:, None] == m_iota).astype(jnp.float32)        # (TN, M)
+        f = oh @ feat                                             # (TN,)
+        t = oh @ thr
+        l = oh @ lc
+        is_cat = oh @ has_cat
+        f_iota = jax.lax.broadcasted_iota(jnp.float32, (TN, F), 1)
+        x_oh = (jnp.maximum(f, 0.0)[:, None] == f_iota).astype(jnp.float32)
+        x = jnp.sum(X * x_oh, axis=1)                             # (TN,)
+        go_num = (x >= t).astype(jnp.float32)
+        # categorical bit test: word/bit via one-hot over mask words
+        words = oh @ cat                                          # (TN, W)
+        code = jnp.clip(x, 0.0, MASK_WORDS * 32 - 1).astype(jnp.int32)
+        w_iota = jax.lax.broadcasted_iota(jnp.int32, (TN, MASK_WORDS), 1)
+        w_oh = ((code[:, None] // 32) == w_iota).astype(jnp.float32)
+        word = jnp.sum(words * w_oh, axis=1).astype(jnp.uint32)
+        bit = ((word >> (code % 32).astype(jnp.uint32)) & 1).astype(jnp.float32)
+        go = jnp.where(is_cat > 0, bit, go_num)
+        nxt = l + go
+        node = jnp.where(l >= 0, nxt, node)
+
+    m_iota = jax.lax.broadcasted_iota(jnp.float32, (TN, M), 1)
+    oh = (node[:, None] == m_iota).astype(jnp.float32)
+    out_ref[:, 0, :] = oh @ leaf                                  # (TN, O)
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "tile_n", "interpret"))
+def forest_predict_pallas(X, feature, threshold, cat_mask, left_child,
+                          leaf_value, depth: int, tile_n: int = 256,
+                          interpret: bool = False):
+    """-> (N, T, O). Inputs as in ref.forest_predict_ref."""
+    N, F = X.shape
+    T, M = feature.shape
+    O = leaf_value.shape[-1]
+    TN = min(tile_n, N)
+    pad = (-N) % TN
+    if pad:
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+    Np = N + pad
+
+    out = pl.pallas_call(
+        functools.partial(_infer_kernel, depth=depth, n_nodes=M),
+        grid=(Np // TN, T),
+        in_specs=[
+            pl.BlockSpec((TN, F), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, M), lambda i, t: (t, 0)),
+            pl.BlockSpec((1, M), lambda i, t: (t, 0)),
+            pl.BlockSpec((1, M, MASK_WORDS), lambda i, t: (t, 0, 0)),
+            pl.BlockSpec((1, M), lambda i, t: (t, 0)),
+            pl.BlockSpec((1, M, O), lambda i, t: (t, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TN, 1, O), lambda i, t: (i, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, T, O), jnp.float32),
+        interpret=interpret,
+    )(X.astype(jnp.float32), feature, threshold.astype(jnp.float32),
+      cat_mask, left_child, leaf_value.astype(jnp.float32))
+    return out[:N]

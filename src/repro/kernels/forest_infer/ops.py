@@ -1,0 +1,28 @@
+"""jit'd wrapper: Forest SoA -> device arrays -> kernel dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.forest_infer.forest_infer import forest_predict_pallas
+from repro.kernels.forest_infer.ref import forest_predict_ref
+
+
+def forest_predict(forest, X: np.ndarray, impl: str | None = None):
+    """forest: repro.core.tree.Forest; X: (N, F) raw-value matrix.
+    -> (N, T, out_dim) per-tree outputs."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    args = (jnp.asarray(X, jnp.float32),
+            jnp.asarray(forest.feature), jnp.asarray(forest.threshold),
+            jnp.asarray(forest.cat_mask), jnp.asarray(forest.left_child),
+            jnp.asarray(forest.leaf_value))
+    depth = int(max(1, forest.depth))
+    if impl == "ref":
+        return forest_predict_ref(*args, depth=depth)
+    if impl == "pallas":
+        return forest_predict_pallas(*args, depth=depth)
+    if impl == "interpret":
+        return forest_predict_pallas(*args, depth=depth, interpret=True)
+    raise ValueError(f"unknown impl {impl!r}")

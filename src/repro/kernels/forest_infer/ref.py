@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for forest inference (lockstep traversal, gather-based).
+
+Semantics match repro.core.tree.predict_raw on the SoA forest layout:
+numerical 'x >= threshold', categorical bit-mask test (mask non-empty), depth
+rounds of traversal, leaves self-loop. Oblique nodes are NOT supported here
+(the engine layer routes oblique models elsewhere — lossy compilation, §3.7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+MASK_WORDS = 8
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def forest_predict_ref(X, feature, threshold, cat_mask, left_child, leaf_value,
+                       depth: int):
+    """X: (N, F) f32; feature/left_child: (T, M) i32; threshold: (T, M) f32;
+    cat_mask: (T, M, W) uint32; leaf_value: (T, M, O) f32 -> (N, T, O)."""
+    N, F = X.shape
+    T, M = feature.shape
+
+    def tree_fn(feat_t, thr_t, cat_t, lc_t, leaf_t):
+        def body(node, _):
+            f = feat_t[node]                       # (N,) gather
+            f_safe = jnp.maximum(f, 0)
+            x = jnp.take_along_axis(X, f_safe[:, None], axis=1)[:, 0]
+            thr = thr_t[node]
+            go_num = x >= thr
+            code = jnp.clip(x.astype(jnp.int32), 0, MASK_WORDS * 32 - 1)
+            words = cat_t[node]                    # (N, W)
+            w = jnp.take_along_axis(words, (code[:, None] // 32), axis=1)[:, 0]
+            bit = (w >> (code % 32).astype(jnp.uint32)) & 1
+            go = jnp.where(words.any(-1), bit.astype(bool), go_num)
+            lc = lc_t[node]
+            nxt = lc + go.astype(jnp.int32)
+            return jnp.where(lc >= 0, nxt, node), None
+
+        node0 = jnp.zeros((N,), jnp.int32)
+        node, _ = jax.lax.scan(body, node0, None, length=max(1, depth))
+        return leaf_t[node]                        # (N, O)
+
+    out = jax.vmap(tree_fn, in_axes=(0, 0, 0, 0, 0), out_axes=1)(
+        feature, threshold, cat_mask, left_child, leaf_value)
+    return out                                     # (N, T, O)

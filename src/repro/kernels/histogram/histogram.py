@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: per-node gradient histograms as one-hot MXU matmuls.
+
+The CPU/GPU formulation of histogram building is a scatter-add; TPUs have no
+fast scatter, but they have a 128x128 systolic MXU. The TPU-native insight
+(DESIGN.md §2.1): express the histogram as
+
+    hist[n, b, s] = onehot_node[i, n] * onehot_bin[i, b] * stats[i, s]
+                  = (onehot_node^T @ (onehot_bin * stats_s))[n, b]
+
+i.e. S matmuls of (n_nodes, TN) @ (TN, B) per feature — fully MXU-resident.
+
+Grid: (F, N // TN). Example tiles accumulate into the same per-feature output
+block (revisited across the trailing grid dim; TPU grid steps are sequential,
+so read-modify-write on out_ref is well-defined).
+
+VMEM per step (TN=512, B=256, S=4, n_nodes=32):
+    codes tile 512B + stats 8KB + onehot_bin 512KB + onehot_node 64KB
+    + out block 128KB  ->  ~0.7 MB  (fits far under the ~16MB/core budget)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(codes_ref, stats_ref, node_ref, out_ref, *, n_nodes: int,
+                 n_bins: int, n_stats: int):
+    i = pl.program_id(1)  # example-tile index (trailing, sequential)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[...].astype(jnp.int32)[:, 0]      # (TN,)
+    node = node_ref[...].astype(jnp.int32)              # (TN,)
+    stats = stats_ref[...]                              # (TN, S)
+    active = (node >= 0).astype(jnp.float32)
+    TN = codes.shape[0]
+
+    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (TN, n_bins), 1)
+    onehot_bin = (codes[:, None] == bin_iota).astype(jnp.float32)   # (TN, B)
+    node_iota = jax.lax.broadcasted_iota(jnp.int32, (TN, n_nodes), 1)
+    onehot_node = (node[:, None] == node_iota).astype(jnp.float32)  # (TN, nodes)
+    onehot_node = onehot_node * active[:, None]
+
+    acc = out_ref[...]                                  # (1, nodes, B, S)
+    for s in range(n_stats):
+        weighted = onehot_bin * stats[:, s][:, None]    # (TN, B)
+        h = jax.lax.dot_general(
+            onehot_node, weighted, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (nodes, B) MXU
+        acc = acc.at[0, :, :, s].add(h)
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "tile_n",
+                                             "interpret"))
+def histogram_pallas(codes: jax.Array, stats: jax.Array, node_of: jax.Array,
+                     n_nodes: int, n_bins: int = 256, tile_n: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """codes: (N, F) uint8; stats: (N, S) f32; node_of: (N,) int32 (-1 =
+    inactive). -> (n_nodes, F, B, S) f32."""
+    N, F = codes.shape
+    S = stats.shape[1]
+    TN = min(tile_n, N)
+    pad = (-N) % TN
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+        stats = jnp.pad(stats, ((0, pad), (0, 0)))
+        node_of = jnp.pad(node_of, (0, pad), constant_values=-1)
+    Np = N + pad
+
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, n_nodes=n_nodes, n_bins=n_bins,
+                          n_stats=S),
+        grid=(F, Np // TN),
+        in_specs=[
+            pl.BlockSpec((TN, 1), lambda f, i: (i, f)),          # codes column
+            pl.BlockSpec((TN, S), lambda f, i: (i, 0)),          # stats tile
+            pl.BlockSpec((TN,), lambda f, i: (i,)),              # node tile
+        ],
+        out_specs=pl.BlockSpec((1, n_nodes, n_bins, S),
+                               lambda f, i: (f, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((F, n_nodes, n_bins, S), jnp.float32),
+        interpret=interpret,
+    )(codes, stats.astype(jnp.float32), node_of.astype(jnp.int32))
+    return out.transpose(1, 0, 2, 3)                     # (nodes, F, B, S)

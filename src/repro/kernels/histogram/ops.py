@@ -1,0 +1,28 @@
+"""jit'd dispatch wrapper for the histogram op.
+
+impl:
+  * "pallas"    — compiled Pallas kernel (TPU target)
+  * "interpret" — Pallas kernel body interpreted on CPU (correctness path)
+  * "ref"       — pure-jnp oracle (segment_sum)
+  * None        — pallas on TPU, ref elsewhere
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.histogram.histogram import histogram_pallas
+from repro.kernels.histogram.ref import histogram_ref
+
+
+def histogram(codes, stats, node_of, n_nodes: int, n_bins: int = 256,
+              impl: str | None = None):
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return histogram_ref(codes, stats, node_of, n_nodes, n_bins)
+    if impl == "pallas":
+        return histogram_pallas(codes, stats, node_of, n_nodes, n_bins)
+    if impl == "interpret":
+        return histogram_pallas(codes, stats, node_of, n_nodes, n_bins,
+                                interpret=True)
+    raise ValueError(f"unknown impl {impl!r}")

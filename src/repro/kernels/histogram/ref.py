@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the gradient-histogram kernel.
+
+hist[n, f, b, s] = sum over examples i with node_of[i]==n and codes[i,f]==b
+of stats[i, s].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(codes: jax.Array, stats: jax.Array, node_of: jax.Array,
+                  n_nodes: int, n_bins: int) -> jax.Array:
+    """codes: (N, F) uint8/int32; stats: (N, S) f32; node_of: (N,) int32 with
+    -1 = inactive. -> (n_nodes, F, B, S) f32."""
+    N, F = codes.shape
+    S = stats.shape[1]
+    B = n_bins
+    active = node_of >= 0
+    node = jnp.where(active, node_of, 0)
+    # flat segment id per (example, feature): (node * F + f) * B + code
+    seg = (node[:, None] * F + jnp.arange(F)[None, :]) * B + codes.astype(jnp.int32)
+    w = jnp.where(active, 1.0, 0.0)[:, None] * stats          # (N, S)
+    contrib = w[:, None, :] * jnp.ones((1, F, 1), stats.dtype)  # (N, F, S)
+    flat = jax.ops.segment_sum(contrib.reshape(N * F, S), seg.reshape(N * F),
+                               num_segments=n_nodes * F * B)
+    return flat.reshape(n_nodes, F, B, S)

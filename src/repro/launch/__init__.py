@@ -1,0 +1,1 @@
+"""Launchers: production mesh, AOT dry-run, roofline analysis, train/serve."""

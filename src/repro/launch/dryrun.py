@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod AOT dry-run.
+
+For every (architecture x applicable shape x mesh) cell:
+  jit(step).lower(ShapeDtypeStructs...).compile()
+on 512 placeholder host devices — proving the sharding config is coherent
+(no allocation happens), then records memory/cost analyses and the collective
+schedule for the roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-done]   # driver
+
+The driver runs each cell in a fresh subprocess (compile memory isolation on
+the 1-core host) and writes results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def _cell_path(arch: str, shape: str, mesh: str, suffix: str = "") -> str:
+    name = f"{arch}__{shape}__{mesh}{('__' + suffix) if suffix else ''}.json"
+    return os.path.abspath(os.path.join(RESULTS_DIR, name))
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_kind: str, out_path: str | None,
+             overrides: dict | None = None,
+             rules_overrides: dict | None = None) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import SHAPES, applicable_shapes, get_arch
+    from repro.launch.mesh import HBM_PER_CHIP, make_production_mesh
+    from repro.launch.roofline import derive_terms, parse_collectives
+    from repro.models import lm
+    from repro.serving import make_decode_step, make_prefill, serve_state_specs
+    from repro.sharding import resolve_spec, rules_for, tree_shardings
+    from repro.train import make_train_step
+
+    cfg = get_arch(arch_name)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    assert shape_name in applicable_shapes(cfg), \
+        f"{shape_name} not applicable to {arch_name} (see DESIGN.md §Arch-applicability)"
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    long_ctx = shape.seq_len >= 2 ** 19
+    rules = rules_for("train" if shape.kind == "train" else "serve", long_context=long_ctx)
+    if rules_overrides:
+        rules.update(rules_overrides)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        bundle = make_train_step(cfg, shape, mesh, rules)
+        arg_specs = (bundle.state_specs, lm.batch_spec(cfg, shape))
+        arg_sh = (bundle.state_shardings, bundle.batch_shardings)
+        jf = jax.jit(bundle.step_fn, in_shardings=arg_sh, donate_argnums=(0,))
+    elif shape.kind == "prefill":
+        b = make_prefill(cfg, shape, mesh, rules)
+        p_specs, _ = serve_state_specs(cfg)
+        arg_specs = (p_specs, lm.batch_spec(cfg, shape))
+        arg_sh = (b.param_shardings, b.batch_shardings)
+        jf = jax.jit(b.fn, in_shardings=arg_sh)
+    else:  # decode
+        b = make_decode_step(cfg, shape, mesh, rules)
+        p_specs, _ = serve_state_specs(cfg)
+        arg_specs = (p_specs, lm.batch_spec(cfg, shape),
+                     lm.cache_spec(cfg, shape.global_batch, shape.seq_len))
+        arg_sh = (b.param_shardings, b.batch_shardings, b.cache_shardings)
+        jf = jax.jit(b.fn, in_shardings=arg_sh, donate_argnums=(2,))
+
+    lowered = jf.lower(*arg_specs)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    mem_report = None
+    try:
+        ma = compiled.memory_analysis()
+        mem_report = {k: int(getattr(ma, k)) for k in dir(ma)
+                      if k.endswith("size_in_bytes") and isinstance(getattr(ma, k), int)}
+    except Exception as e:  # CPU backend may not implement it
+        mem_report = {"unavailable": str(e)[:200]}
+
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    terms = derive_terms(cost, coll, cfg, shape, mesh.size)
+
+    # Analytic per-device input bytes (params/opt/cache/batch after sharding):
+    def shard_bytes(tree, axes_tree):
+        import jax.numpy as jnp
+        total = 0
+        leaves, treedef = jax.tree.flatten(tree)
+        sh_leaves = treedef.flatten_up_to(axes_tree) if axes_tree is not None else [None] * len(leaves)
+        for leaf, sh in zip(leaves, sh_leaves):
+            n = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+            if sh is not None:
+                spec = sh.spec if hasattr(sh, "spec") else None
+                if spec is not None:
+                    denom = 1
+                    for part in spec:
+                        if part is None:
+                            continue
+                        for ax in (part if isinstance(part, tuple) else (part,)):
+                            denom *= mesh.shape[ax]
+                    n = -(-n // denom)
+            total += n
+        return total
+
+    input_bytes = sum(shard_bytes(s, sh) for s, sh in zip(arg_specs, arg_sh))
+
+    print(f"== {arch_name} x {shape_name} x {mesh_kind} ({mesh.shape}) ==")
+    print(f"memory_analysis: {mem_report}")
+    print(f"cost_analysis: flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+    print(f"collectives: {coll['count_by_kind']} -> {coll['total_bytes']:.3e} B/device")
+    print(f"input bytes/device: {input_bytes:.3e} "
+          f"({input_bytes / HBM_PER_CHIP * 100:.1f}% of 16GiB HBM)")
+    print(f"terms: compute={terms.compute_s:.4e}s memory={terms.memory_s:.4e}s "
+          f"collective={terms.collective_s:.4e}s dominant={terms.dominant} "
+          f"useful_ratio={terms.useful_ratio:.3f} roofline_frac={terms.roofline_fraction:.3f}")
+
+    record = {
+        "arch": arch_name, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), "chips": mesh.size,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": {k: v for k, v in cost.items()
+                          if isinstance(v, (int, float)) and v},
+        "memory_analysis": mem_report,
+        "collectives": coll,
+        "input_bytes_per_device": input_bytes,
+        "terms": {
+            "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s, "dominant": terms.dominant,
+            "flops_per_device": terms.flops_per_device,
+            "bytes_per_device": terms.bytes_per_device,
+            "coll_bytes_per_device": terms.coll_bytes_per_device,
+            "model_flops": terms.model_flops,
+            "useful_ratio": terms.useful_ratio,
+            "roofline_fraction": terms.roofline_fraction,
+        },
+        "overrides": overrides or {},
+        "rules_overrides": {k: list(v) for k, v in (rules_overrides or {}).items()},
+    }
+    if out_path:
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def all_cells(mesh_kinds=("single", "multi")):
+    from repro.configs import applicable_shapes, get_arch, list_archs
+    for arch in list_archs():
+        for shape in applicable_shapes(get_arch(arch)):
+            for mk in mesh_kinds:
+                yield arch, shape, mk
+
+
+def driver(mesh_kinds, skip_done: bool, overrides=(), suffix: str = "") -> int:
+    cells = list(all_cells(mesh_kinds))
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    failures = 0
+    for i, (arch, shape, mk) in enumerate(cells):
+        out = _cell_path(arch, shape, mk, suffix)
+        if skip_done and os.path.exists(out):
+            continue
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mk, "--out", out]
+        for ov in overrides:
+            cmd += ["--override", ov]
+        r = subprocess.run(
+            cmd, capture_output=True, text=True,
+            env=dict(os.environ, PYTHONPATH=os.environ.get("PYTHONPATH", "src")),
+        )
+        dt = time.time() - t0
+        status = "ok" if r.returncode == 0 else "FAIL"
+        print(f"[{i + 1}/{len(cells)}] {arch} x {shape} x {mk}: {status} ({dt:.0f}s)",
+              flush=True)
+        if r.returncode != 0:
+            failures += 1
+            err_path = out.replace(".json", ".err")
+            with open(err_path, "w") as f:
+                f.write(r.stdout[-5000:] + "\n---\n" + r.stderr[-10000:])
+            print(r.stderr[-2000:], flush=True)
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (perf iterations)")
+    ap.add_argument("--rules-override", action="append", default=[],
+                    help="sharding rule override logical=axis1,axis2 (perf)")
+    ap.add_argument("--suffix", default="", help="result-file suffix (driver mode)")
+    args = ap.parse_args()
+
+    kinds = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        sys.exit(1 if driver(kinds, args.skip_done, args.override, args.suffix) else 0)
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("True", "False"):
+            v = v == "True"
+        overrides[k] = v
+    rules_overrides = {}
+    for ov in args.rules_override:
+        k, v = ov.split("=", 1)
+        rules_overrides[k] = tuple(a for a in v.split(",") if a)
+
+    for mk in kinds:
+        out = args.out or _cell_path(args.arch, args.shape, mk)
+        run_cell(args.arch, args.shape, mk, out, overrides, rules_overrides)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A *function*, not a module-level constant: importing this module never touches
+jax device state (device count is locked at first jax init, and smoke tests
+must see 1 CPU device while the dry-run forces 512 placeholders).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Elastic/degraded mesh shapes (restart after node loss, tests)."""
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants (targets for the roofline; the host is CPU-only).
+PEAK_BF16_FLOPS = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per direction)
+HBM_PER_CHIP = 16 * 1024**3   # 16 GiB

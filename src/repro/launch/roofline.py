@@ -1,0 +1,181 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = sum(bytes moved per device over ICI) / link_bw
+
+``compiled.cost_analysis()`` reports the *per-device* (post-SPMD) module, so
+per-device terms divide by single-chip peaks; the prompt's global form
+(HLO_FLOPs_global / (chips x peak)) is identical because
+HLO_FLOPs_global = per_device x chips.
+
+Collective bytes are NOT in cost_analysis: we parse the post-partitioning HLO
+text and sum shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, with ring multipliers per op kind.
+
+MODEL_FLOPS (the "useful" floor) = 6*N*D for dense training, 6*N_active*D for
+MoE, 2*N(_active)*tokens for forward-only (prefill/decode); the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^\s]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # unknown -> conservative
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device bytes moved over ICI, by collective kind (ring estimates)."""
+    by_kind: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        result_bytes = _shape_bytes(m.group("shapes"))
+        n = max(2, _group_size(line))
+        ring = (n - 1) / n
+        if op == "all-reduce":
+            moved = 2.0 * result_bytes * ring          # RS + AG, result==operand
+        elif op == "all-gather":
+            moved = result_bytes * ring                # result = gathered
+        elif op == "reduce-scatter":
+            moved = result_bytes * (n - 1)             # operand = result*n
+        elif op == "all-to-all":
+            moved = result_bytes * ring
+        else:  # collective-permute
+            moved = result_bytes
+        by_kind[op] = by_kind.get(op, 0.0) + moved
+        count[op] = count.get(op, 0) + 1
+    return {"bytes_by_kind": by_kind, "count_by_kind": count,
+            "total_bytes": sum(by_kind.values())}
+
+
+# --------------------------------------------------------------- model flops
+
+def count_params(cfg: ModelConfig) -> tuple[int, int]:
+    """(total params, active-per-token params). MoE experts scale by top_k/E."""
+    from repro.models import lm
+    from repro.models.params import is_spec
+    import jax
+    import numpy as np
+
+    sch = lm.model_schema(cfg)
+    total = active = 0
+    for path, spec in jax.tree_util.tree_flatten_with_path(sch, is_leaf=is_spec)[0]:
+        n = int(np.prod(spec.shape))
+        total += n
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        in_moe = "moe" in keys and "shared" not in keys and spec.shape and \
+            cfg.n_experts and any(d == cfg.n_experts for d in spec.shape[:3])
+        active += int(n * cfg.top_k / cfg.n_experts) if in_moe else n
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    _, n_active = count_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch
+
+
+# --------------------------------------------------------------- terms
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO flops (remat/redundancy waste detector)."""
+        g = self.flops_per_device * self.chips
+        return self.model_flops / g if g else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / achievable step time (higher is better)."""
+        ideal = self.model_flops / self.chips / PEAK_BF16_FLOPS
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+
+def derive_terms(cost: dict, coll: dict, cfg: ModelConfig, shape: ShapeConfig,
+                 chips: int) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll["total_bytes"])
+    return RooflineTerms(
+        compute_s=flops / PEAK_BF16_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=cbytes / ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        coll_bytes_per_device=cbytes,
+        model_flops=model_flops(cfg, shape),
+        chips=chips,
+    )

@@ -1,0 +1,66 @@
+"""Training launcher.
+
+  python -m repro.launch.train --arch qwen2-1.5b --smoke --steps 50
+  python -m repro.launch.train --arch qwen3-8b --shape train_4k --mesh single
+
+On the production meshes this wires the same train_loop used by tests into
+the 16x16 / 2x16x16 shardings (run under real XLA devices on hardware; here
+the mesh paths are exercised by the dry-run and the 8-device subprocess
+tests). XLA latency-hiding/overlap flags are plumbed here.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+OVERLAP_FLAGS = (
+    "--xla_tpu_enable_latency_hiding_scheduler=true "
+    "--xla_tpu_overlap_compute_collective_tc=true "
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shape (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--mesh", default="none", choices=["none", "single", "multi"])
+    ap.add_argument("--overlap-flags", action="store_true",
+                    help="enable the XLA latency-hiding scheduler (TPU)")
+    args = ap.parse_args()
+
+    if args.overlap_flags:
+        os.environ["XLA_FLAGS"] = OVERLAP_FLAGS + os.environ.get("XLA_FLAGS", "")
+
+    from repro.configs import SHAPES, get_arch, smoke_config
+    from repro.configs.base import ShapeConfig
+    from repro.sharding import rules_for
+    from repro.train.loop import LoopConfig, train_loop
+
+    cfg = get_arch(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = rules = None
+    if args.smoke:
+        cfg = smoke_config(cfg)
+        shape = ShapeConfig("smoke", "train", args.seq or 128, args.batch or 4)
+    elif args.batch or args.seq:
+        shape = ShapeConfig("custom", "train", args.seq or shape.seq_len,
+                            args.batch or shape.global_batch)
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        rules = rules_for("train")
+
+    out = train_loop(cfg, shape, os.path.join(args.ckpt, args.arch),
+                     LoopConfig(total_steps=args.steps), mesh=mesh, rules=rules)
+    print(f"done: {out['final_step']} steps; last losses: {out['losses'][-3:]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""LM substrate: transformer/MoE/SSM building blocks and model assembly."""

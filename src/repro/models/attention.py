@@ -1,0 +1,216 @@
+"""GQA attention: flash-style chunked softmax attention (pure JAX, never
+materializes the full score matrix), causal/bidirectional/prefix-LM masks,
+KV-cache decode, and an optional causal-block-skip variant (perf lever).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx, rmsnorm
+from repro.models.params import ParamSpec
+
+NEG = -1.0e30
+
+
+def attention_schema(cfg: ModelConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    sch = {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", "qkv")),
+        "wk": ParamSpec((d, kv, dh), ("embed", "kv_heads", "qkv")),
+        "wv": ParamSpec((d, kv, dh), ("embed", "kv_heads", "qkv")),
+        "wo": ParamSpec((h, dh, d), ("heads", "qkv", "embed")),
+    }
+    if cfg.qkv_bias:
+        sch["bq"] = ParamSpec((h, dh), ("heads", "qkv"), init="zeros")
+        sch["bk"] = ParamSpec((kv, dh), ("kv_heads", "qkv"), init="zeros")
+        sch["bv"] = ParamSpec((kv, dh), ("kv_heads", "qkv"), init="zeros")
+    if cfg.qk_norm:
+        sch["q_norm"] = ParamSpec((dh,), (None,), init="ones")
+        sch["k_norm"] = ParamSpec((dh,), (None,), init="ones")
+    return sch
+
+
+def qkv_project(p, xq, xkv, ctx: Ctx, q_positions=None, kv_positions=None,
+                use_rope: bool = True):
+    """xq: (B, Sq, D); xkv: (B, Skv, D). Returns q (B,Sq,H,Dh), k/v (B,Skv,KV,Dh)."""
+    cfg = ctx.cfg
+    dt = xq.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope and cfg.rope_theta > 0:
+        from repro.models.layers import rope
+        q = rope(q, q_positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    q = ctx.constrain(q, ("batch", "seq", "heads", "qkv"))
+    k = ctx.constrain(k, ("batch", "seq", "kv_heads", "qkv"))
+    v = ctx.constrain(v, ("batch", "seq", "kv_heads", "qkv"))
+    return q, k, v
+
+
+def out_project(p, attn_out, ctx: Ctx):
+    """attn_out: (B, S, H, Dh) -> (B, S, D)."""
+    out = jnp.einsum("bshk,hkd->bsd", attn_out, p["wo"].astype(attn_out.dtype))
+    return ctx.constrain(out, ("batch", "seq", "embed_act"))
+
+
+def _mask(qp, kp, causal: bool, prefix_len):
+    """qp: (B, cq), kp: (B, ck) -> bool (B, cq, ck). True = attend."""
+    if causal:
+        m = kp[:, None, :] <= qp[:, :, None]
+        if prefix_len is not None:
+            m = m | (kp[:, None, :] < prefix_len)
+        return m
+    return jnp.ones((qp.shape[0], qp.shape[1], kp.shape[1]), bool)
+
+
+def flash_attention(q, k, v, q_pos, k_pos, ctx: Ctx, *, causal=True,
+                    prefix_len=None):
+    """Chunked-softmax attention.
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, KV, Dh); *_pos: (B, S) int32.
+    Scans over (q-chunk, kv-chunk) tiles keeping a running max/denominator in
+    fp32, so peak memory is O(cq * ck) per head instead of O(Sq * Skv).
+    ``attn_impl='chunked_causal_skip'`` only visits the lower-triangular tiles.
+    """
+    cfg = ctx.cfg
+    B, Sq, H, Dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    from repro.models.layers import largest_divisor_leq
+    cq = largest_divisor_leq(Sq, cfg.attn_chunk_q)
+    ck = largest_divisor_leq(Skv, cfg.attn_chunk_kv)
+    nq, nk = Sq // cq, Skv // ck
+    scale = Dh ** -0.5
+    qg = (q * scale).reshape(B, nq, cq, KV, G, Dh)
+    qp = q_pos.reshape(B, nq, cq)
+    kc = k.reshape(B, nk, ck, KV, Dh)
+    vc = v.reshape(B, nk, ck, KV, Dh)
+    kp = k_pos.reshape(B, nk, ck)
+
+    def tile(qcb, qpb, carry, ki):
+        """One (q-chunk x kv-chunk) tile update. carry = (m, l, acc) fp32."""
+        m, l, acc = carry
+        kcb = jnp.take(kc, ki, axis=1)  # (B, ck, KV, Dh)
+        vcb = jnp.take(vc, ki, axis=1)
+        kpb = jnp.take(kp, ki, axis=1)  # (B, ck)
+        s = jnp.einsum("bqvgd,bkvd->bqvgk", qcb, kcb,
+                       preferred_element_type=jnp.float32)
+        msk = _mask(qpb, kpb, causal, prefix_len)[:, :, None, None, :]
+        s = jnp.where(msk, s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * msk
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bqvgk,bkvd->bqvgd", p.astype(vcb.dtype), vcb,
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    def init_carry():
+        m = jnp.full((B, cq, KV, G), NEG, jnp.float32)
+        l = jnp.zeros((B, cq, KV, G), jnp.float32)
+        acc = jnp.zeros((B, cq, KV, G, Dh), jnp.float32)
+        return m, l, acc
+
+    def finalize(carry):
+        m, l, acc = carry
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l[..., None]).reshape(B, cq, H, Dh)
+
+    if cfg.attn_impl == "chunked_causal_skip" and causal and prefix_len is None \
+            and Sq == Skv and cq == ck:
+        # Visit only lower-triangular tiles: scan over the static list of
+        # (qi, ki<=qi) pairs; accumulators live in full-size buffers updated at
+        # row qi. Eliminates the ~2x masked-tile compute of the dense variant.
+        pairs = [(qi, ki) for qi in range(nq) for ki in range(qi + 1)]
+        pair_q = jnp.array([p_[0] for p_ in pairs], jnp.int32)
+        pair_k = jnp.array([p_[1] for p_ in pairs], jnp.int32)
+        M = jnp.full((nq, B, cq, KV, G), NEG, jnp.float32)
+        L = jnp.zeros((nq, B, cq, KV, G), jnp.float32)
+        ACC = jnp.zeros((nq, B, cq, KV, G, Dh), jnp.float32)
+
+        def body(carry, pq_pk):
+            M, L, ACC = carry
+            qi, ki = pq_pk
+            qcb = jnp.take(qg, qi, axis=1)
+            qpb = jnp.take(qp, qi, axis=1)
+            sub = (jnp.take(M, qi, axis=0), jnp.take(L, qi, axis=0),
+                   jnp.take(ACC, qi, axis=0))
+            m, l, acc = tile(qcb, qpb, sub, ki)
+            M = jax.lax.dynamic_update_index_in_dim(M, m, qi, 0)
+            L = jax.lax.dynamic_update_index_in_dim(L, l, qi, 0)
+            ACC = jax.lax.dynamic_update_index_in_dim(ACC, acc, qi, 0)
+            return (M, L, ACC), None
+
+        (M, L, ACC), _ = jax.lax.scan(body, (M, L, ACC), (pair_q, pair_k))
+        L = jnp.where(L == 0.0, 1.0, L)
+        out = (ACC / L[..., None]).reshape(nq, B, cq, H, Dh)
+        out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, Dh)
+        return out.astype(q.dtype)
+
+    # Dense tiling: outer scan over q chunks, inner scan over all kv chunks.
+    def q_body(_, xs):
+        qcb, qpb = xs
+
+        def kv_body(carry, ki):
+            return tile(qcb, qpb, carry, ki), None
+
+        carry, _ = jax.lax.scan(kv_body, init_carry(), jnp.arange(nk))
+        return None, finalize(carry)
+
+    _, outs = jax.lax.scan(q_body, None,
+                           (jnp.moveaxis(qg, 1, 0), jnp.moveaxis(qp, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, Dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, ctx: Ctx, *, valid_len=None):
+    """Single-token attention over a cache.
+
+    q: (B, 1, H, Dh); k_cache/v_cache: (B, Smax, KV, Dh); pos: (B,) int32 —
+    index of the current token inside the cache (inclusive upper bound of the
+    causal mask). valid_len: optional static bound (cross-attn: no mask).
+    """
+    B, _, H, Dh = q.shape
+    Smax, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    # dequantize low-precision caches (e.g. float8_e4m3fn) at read time
+    k_cache = k_cache.astype(q.dtype)
+    v_cache = v_cache.astype(q.dtype)
+    qg = (q * Dh ** -0.5).reshape(B, KV, G, Dh)
+    s = jnp.einsum("bvgd,bkvd->bvgk", qg, k_cache,
+                   preferred_element_type=jnp.float32)  # (B, KV, G, Smax)
+    kpos = jnp.arange(Smax, dtype=jnp.int32)
+    if valid_len is None:
+        msk = kpos[None, :] <= pos[:, None]  # (B, Smax)
+    else:
+        msk = jnp.broadcast_to(kpos[None, :] < valid_len, (B, Smax))
+    s = jnp.where(msk[:, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bvgk,bkvd->bvgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, Dh).astype(q.dtype)
+
+
+def reference_attention(q, k, v, q_pos, k_pos, *, causal=True, prefix_len=None):
+    """O(S^2)-memory oracle used by tests."""
+    B, Sq, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, Dh).astype(jnp.float32) * Dh ** -0.5
+    s = jnp.einsum("bqvgd,bkvd->bqvgk", qg, k.astype(jnp.float32))
+    msk = _mask(q_pos, k_pos, causal, prefix_len)[:, :, None, None, :]
+    s = jnp.where(msk, s, NEG)
+    p = jax.nn.softmax(s, axis=-1) * msk
+    out = jnp.einsum("bqvgk,bkvd->bqvgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, Dh).astype(q.dtype)

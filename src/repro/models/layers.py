@@ -1,0 +1,177 @@
+"""Shared transformer building blocks (pure functions over param dicts)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+from repro.sharding import with_logical_constraint
+
+
+@dataclass(frozen=True)
+class Ctx:
+    """Runtime context threaded through apply functions."""
+    cfg: ModelConfig
+    mesh: Any = None            # jax.sharding.Mesh | None
+    rules: Mapping[str, tuple[str, ...]] | None = None
+
+    def constrain(self, x, logical):
+        return with_logical_constraint(x, logical, self.mesh, self.rules)
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+
+# ---------------------------------------------------------------- norms
+
+def rmsnorm_schema(dim: int, axes=("embed_act",)) -> ParamSpec:
+    return ParamSpec((dim,), axes, init="ones")
+
+
+def rmsnorm(scale, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm_schema(dim: int):
+    return {"scale": ParamSpec((dim,), ("embed_act",), init="ones"),
+            "bias": ParamSpec((dim,), ("embed_act",), init="zeros")}
+
+
+def layernorm(p, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (>=1). Used to pick chunk sizes."""
+    c = max(1, min(cap, n))
+    while n % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------- rope
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+
+def mlp_schema(cfg: ModelConfig, d_ff: int | None = None,
+               mlp_axis: str = "mlp") -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    sch = {
+        "w_in": ParamSpec((d, f), ("embed", mlp_axis)),
+        "w_out": ParamSpec((f, d), (mlp_axis, "embed")),
+    }
+    if gated:
+        sch["w_gate"] = ParamSpec((d, f), ("embed", mlp_axis))
+    return sch
+
+
+def _act(name: str, x):
+    if name == "swiglu":
+        return jax.nn.silu(x)
+    if name == "geglu" or name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu_sq":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def mlp(p, x, ctx: Ctx, act: str | None = None):
+    """x: (B, S, D) -> (B, S, D)."""
+    act = act or ctx.cfg.act
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype))
+    h = ctx.constrain(h, ("batch", "seq", "mlp"))
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        h = _act(act, g) * h
+    else:
+        h = _act(act, h)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(x.dtype))
+    return ctx.constrain(out, ("batch", "seq", "embed_act"))
+
+
+# ---------------------------------------------------------------- embedding / unembed
+
+def embed_schema(cfg: ModelConfig) -> dict:
+    sch = {"tokens": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                               init="embed", scale=0.02)}
+    if not cfg.tie_embeddings:
+        sch["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return sch
+
+
+def embed(p, tokens, ctx: Ctx):
+    x = jnp.take(p["tokens"], tokens, axis=0).astype(ctx.dtype)
+    if ctx.cfg.embed_scale:
+        x = x * jnp.asarray(ctx.cfg.d_model ** 0.5, ctx.dtype)
+    return ctx.constrain(x, ("batch", "seq", "embed_act"))
+
+
+def unembed_matrix(p, ctx: Ctx):
+    if "unembed" in p:
+        return p["unembed"].astype(ctx.dtype)  # (D, V)
+    return p["tokens"].T.astype(ctx.dtype)
+
+
+def chunked_softmax_xent(h, unembed_dv, labels, weights, ctx: Ctx):
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    h: (B, S, D) final hidden states; unembed_dv: (D, V);
+    labels: (B, S) int32; weights: (B, S) float (0 for padding).
+    Returns (sum_loss, sum_weight).
+    """
+    B, S, D = h.shape
+    C = largest_divisor_leq(S, ctx.cfg.loss_chunk)
+    n = S // C
+
+    def body(carry, xs):
+        hs, ls, ws = xs  # (B, C, D), (B, C), (B, C)
+        logits = jnp.einsum("bcd,dv->bcv", hs, unembed_dv).astype(jnp.float32)
+        logits = ctx.constrain(logits, ("batch", "seq", "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        loss = (lse - gold) * ws
+        sl, sw = carry
+        return (sl + loss.sum(), sw + ws.sum()), None
+
+    xs = (h.reshape(B, n, C, D).swapaxes(0, 1),
+          labels.reshape(B, n, C).swapaxes(0, 1),
+          weights.reshape(B, n, C).swapaxes(0, 1))
+    (sum_loss, sum_w), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                               jnp.zeros((), jnp.float32)), xs)
+    return sum_loss, sum_w
+
+
+def logits_last(h_last, unembed_dv, ctx: Ctx):
+    """h_last: (B, D) -> (B, V) logits (for serving)."""
+    logits = jnp.einsum("bd,dv->bv", h_last, unembed_dv).astype(jnp.float32)
+    return ctx.constrain(logits, ("batch", "vocab"))

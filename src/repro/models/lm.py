@@ -1,0 +1,649 @@
+"""Model assembly for all assigned architectures.
+
+One uniform interface over six families (dense / moe / vlm / audio / hybrid /
+ssm):
+
+  * ``model_schema(cfg)``     — nested ParamSpec tree (init + AOT specs + axes)
+  * ``forward(params, batch, ctx)``            — final hidden states (train/prefill)
+  * ``loss_fn(params, batch, ctx)``            — chunked CE loss (+ MoE aux)
+  * ``init_cache / cache_specs / cache_axes``  — decode caches per family
+  * ``prefill(params, batch, ctx)``            — forward + cache population
+  * ``decode_step(params, batch, cache, ctx)`` — one-token serving step
+
+Params are plain nested dicts; layers are stacked on a leading 'layers' dim and
+applied with ``lax.scan`` (+ optional ``jax.checkpoint``), which keeps the HLO
+small enough to AOT-compile 64-layer / 314B-param configs on the CPU host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    attention_schema,
+    decode_attention,
+    flash_attention,
+    out_project,
+    qkv_project,
+)
+from repro.models.layers import (
+    Ctx,
+    chunked_softmax_xent,
+    embed,
+    embed_schema,
+    layernorm,
+    layernorm_schema,
+    logits_last,
+    mlp,
+    mlp_schema,
+    rmsnorm,
+    rmsnorm_schema,
+    unembed_matrix,
+)
+from repro.models.moe import moe_block, moe_schema
+from repro.models.params import ParamSpec, Schema, stack_layers
+
+
+# =====================================================================
+# Schemas
+# =====================================================================
+
+def _attn_mlp_block_schema(cfg: ModelConfig) -> Schema:
+    """One decoder block: [ln1 -> attn] + [ln2 -> mlp/moe] (or parallel)."""
+    sch: Schema = {
+        "ln1": rmsnorm_schema(cfg.d_model),
+        "attn": attention_schema(cfg),
+    }
+    if not cfg.parallel_block:
+        sch["ln2"] = rmsnorm_schema(cfg.d_model)
+    if cfg.n_experts:
+        sch["moe"] = moe_schema(cfg)
+    else:
+        sch["mlp"] = mlp_schema(cfg)
+    return sch
+
+
+def _whisper_enc_block_schema(cfg: ModelConfig) -> Schema:
+    return {
+        "ln1": layernorm_schema(cfg.d_model),
+        "attn": attention_schema(cfg),
+        "ln2": layernorm_schema(cfg.d_model),
+        "mlp": mlp_schema(cfg),
+    }
+
+
+def _whisper_dec_block_schema(cfg: ModelConfig) -> Schema:
+    return {
+        "ln1": layernorm_schema(cfg.d_model),
+        "self_attn": attention_schema(cfg),
+        "ln2": layernorm_schema(cfg.d_model),
+        "cross_attn": attention_schema(cfg),
+        "ln3": layernorm_schema(cfg.d_model),
+        "mlp": mlp_schema(cfg),
+    }
+
+
+def _zamba_groups(cfg: ModelConfig) -> tuple[int, int]:
+    per = cfg.attn_every
+    assert per and cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per, per
+
+
+def model_schema(cfg: ModelConfig) -> Schema:
+    fam = cfg.family
+    sch: Schema = {"embed": embed_schema(cfg)}
+    if fam in ("dense", "moe", "vlm"):
+        sch["layers"] = stack_layers(cfg.n_layers, _attn_mlp_block_schema(cfg))
+        sch["final_norm"] = rmsnorm_schema(cfg.d_model)
+    elif fam == "audio":
+        sch["enc_layers"] = stack_layers(cfg.n_enc_layers, _whisper_enc_block_schema(cfg))
+        sch["enc_norm"] = layernorm_schema(cfg.d_model)
+        sch["dec_layers"] = stack_layers(cfg.n_layers, _whisper_dec_block_schema(cfg))
+        sch["final_norm"] = layernorm_schema(cfg.d_model)
+    elif fam == "hybrid":
+        G, per = _zamba_groups(cfg)
+        mamba = {"ln": rmsnorm_schema(cfg.d_model), "m": ssm_mod.mamba2_schema(cfg)}
+        sch["mamba"] = stack_layers(G, stack_layers(per, mamba))
+        sch["shared"] = {  # ONE weight set, invoked G times
+            "ln1": rmsnorm_schema(cfg.d_model),
+            "attn": attention_schema(cfg),
+            "ln2": rmsnorm_schema(cfg.d_model),
+            "mlp": mlp_schema(cfg),
+        }
+        sch["final_norm"] = rmsnorm_schema(cfg.d_model)
+    elif fam == "ssm":
+        block = {
+            "ln1": layernorm_schema(cfg.d_model),
+            "time": ssm_mod.rwkv6_schema(cfg)["time"],
+            "ln2": layernorm_schema(cfg.d_model),
+            "channel": ssm_mod.rwkv6_schema(cfg)["channel"],
+        }
+        sch["ln0"] = layernorm_schema(cfg.d_model)
+        sch["layers"] = stack_layers(cfg.n_layers, block)
+        sch["final_norm"] = layernorm_schema(cfg.d_model)
+    else:
+        raise ValueError(fam)
+    return sch
+
+
+# =====================================================================
+# Block applications
+# =====================================================================
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # 'full': save nothing
+
+
+def _attn_mlp_block(p, x, ctx: Ctx, positions, *, causal=True, prefix_len=None):
+    """Standard decoder block over full sequences (train / prefill)."""
+    cfg = ctx.cfg
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = qkv_project(p["attn"], h, h, ctx, positions, positions)
+    a = flash_attention(q, k, v, positions, positions, ctx, causal=causal,
+                        prefix_len=prefix_len)
+    a = out_project(p["attn"], a, ctx)
+    if cfg.parallel_block:
+        if "moe" in p:
+            m, aux = moe_block(p["moe"], h, ctx)
+        else:
+            m = mlp(p["mlp"], h, ctx)
+        x = x + a + m
+    else:
+        x = x + a
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            m, aux = moe_block(p["moe"], h2, ctx)
+        else:
+            m = mlp(p["mlp"], h2, ctx)
+        x = x + m
+    return ctx.constrain(x, ("batch", "seq", "embed_act")), (a, k, v, aux)
+
+
+def _scan(body, carry, stacked, cfg: ModelConfig):
+    """Scan `body` over the leading 'layers' dim of `stacked` params."""
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, stacked)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    ys = []
+    for i in range(n):
+        p_i = jax.tree.map(lambda a: a[i], stacked)
+        carry, y = body(carry, p_i)
+        ys.append(y)
+    stack = (None if all(y is None for y in ys)
+             else jax.tree.map(lambda *a: jnp.stack(a), *ys))
+    return carry, stack
+
+
+# =====================================================================
+# Forward (train / prefill) per family
+# =====================================================================
+
+def _positions(B: int, S: int, offset: int = 0):
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :] + offset, (B, S))
+
+
+def _embed_inputs(params, batch, ctx: Ctx):
+    """Returns (x, positions, prefix_len). Handles vlm patch prefix and
+    audio(decoder) token embedding."""
+    cfg = ctx.cfg
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(ctx.dtype)  # (B, P, D)
+        toks = embed(params["embed"], batch["tokens"], ctx)  # (B, S-P, D)
+        x = jnp.concatenate([patches, toks], axis=1)
+        B, S = x.shape[0], x.shape[1]
+        return ctx.constrain(x, ("batch", "seq", "embed_act")), _positions(B, S), cfg.n_patches
+    x = embed(params["embed"], batch["tokens"], ctx)
+    B, S = x.shape[0], x.shape[1]
+    if cfg.family == "audio":
+        x = x + _sinusoid(S, cfg.d_model).astype(x.dtype)[None]
+    if cfg.family == "ssm":
+        x = layernorm(params["ln0"], x, cfg.norm_eps)
+    return x, _positions(B, S), None
+
+
+def _sinusoid(S: int, D: int):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(D // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2.0 * dim / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _whisper_encode(params, frames, ctx: Ctx):
+    """frames: (B, T, D) stub frame embeddings -> encoder states (B, T, D)."""
+    cfg = ctx.cfg
+    x = frames.astype(ctx.dtype) + _sinusoid(frames.shape[1], cfg.d_model).astype(ctx.dtype)[None]
+    x = ctx.constrain(x, ("batch", "seq", "embed_act"))
+    pos = _positions(x.shape[0], x.shape[1])
+
+    def body(x, p):
+        h = layernorm(p["ln1"], x, cfg.norm_eps)
+        q, k, v = qkv_project(p["attn"], h, h, ctx, pos, pos, use_rope=False)
+        a = out_project(p["attn"], flash_attention(q, k, v, pos, pos, ctx, causal=False), ctx)
+        x = x + a
+        x = x + mlp(p["mlp"], layernorm(p["ln2"], x, cfg.norm_eps), ctx)
+        return ctx.constrain(x, ("batch", "seq", "embed_act")), None
+
+    x, _ = _scan(body, x, params["enc_layers"], cfg)
+    return layernorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params, batch, ctx: Ctx, *, return_cache: bool = False):
+    """Full-sequence forward. Returns (h_final, cache_or_None, aux_loss).
+
+    cache (when return_cache) is the same structure ``decode_step`` consumes,
+    with entries valid for positions [0, S).
+    """
+    cfg = ctx.cfg
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _forward_attn(params, batch, ctx, return_cache)
+    if fam == "audio":
+        return _forward_whisper(params, batch, ctx, return_cache)
+    if fam == "hybrid":
+        return _forward_zamba(params, batch, ctx, return_cache)
+    if fam == "ssm":
+        return _forward_rwkv(params, batch, ctx, return_cache)
+    raise ValueError(fam)
+
+
+def _forward_attn(params, batch, ctx: Ctx, return_cache: bool):
+    cfg = ctx.cfg
+    x, pos, prefix = _embed_inputs(params, batch, ctx)
+
+    def body(x, p):
+        x, (_, k, v, aux) = _attn_mlp_block(p, x, ctx, pos, prefix_len=prefix)
+        return x, ((k, v) if return_cache else None, aux)
+
+    x, (kv, auxs) = _scan(body, x, params["layers"], cfg)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    aux = auxs.sum() if cfg.n_experts else jnp.zeros((), jnp.float32)
+    cache = None
+    if return_cache:
+        cache = {"k": kv[0], "v": kv[1], "pos": jnp.full((x.shape[0],), x.shape[1], jnp.int32)}
+    return h, cache, aux
+
+
+def _forward_whisper(params, batch, ctx: Ctx, return_cache: bool):
+    cfg = ctx.cfg
+    enc = _whisper_encode(params, batch["frames"], ctx)  # (B, T, D)
+    enc = ctx.constrain(enc, ("batch", "kv_len", "embed_act"))
+    x, pos, _ = _embed_inputs(params, batch, ctx)
+    enc_pos = _positions(enc.shape[0], enc.shape[1])
+
+    def body(x, p):
+        h = layernorm(p["ln1"], x, cfg.norm_eps)
+        q, k, v = qkv_project(p["self_attn"], h, h, ctx, pos, pos, use_rope=False)
+        x = x + out_project(p["self_attn"],
+                            flash_attention(q, k, v, pos, pos, ctx, causal=True), ctx)
+        h = layernorm(p["ln2"], x, cfg.norm_eps)
+        cq, ck, cv = qkv_project(p["cross_attn"], h, enc, ctx, use_rope=False)
+        x = x + out_project(p["cross_attn"],
+                            flash_attention(cq, ck, cv, pos, enc_pos, ctx, causal=False), ctx)
+        x = x + mlp(p["mlp"], layernorm(p["ln3"], x, cfg.norm_eps), ctx)
+        x = ctx.constrain(x, ("batch", "seq", "embed_act"))
+        return x, ((k, v, ck, cv) if return_cache else None)
+
+    x, kv = _scan(body, x, params["dec_layers"], cfg)
+    h = layernorm(params["final_norm"], x, cfg.norm_eps)
+    cache = None
+    if return_cache:
+        cache = {"k": kv[0], "v": kv[1], "xk": kv[2], "xv": kv[3],
+                 "pos": jnp.full((x.shape[0],), x.shape[1], jnp.int32)}
+    return h, cache, jnp.zeros((), jnp.float32)
+
+
+def _shared_attn_block(p, x, ctx: Ctx, pos):
+    cfg = ctx.cfg
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = qkv_project(p["attn"], h, h, ctx, pos, pos)
+    x = x + out_project(p["attn"], flash_attention(q, k, v, pos, pos, ctx, causal=True), ctx)
+    x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps), ctx)
+    return ctx.constrain(x, ("batch", "seq", "embed_act")), (k, v)
+
+
+def _forward_zamba(params, batch, ctx: Ctx, return_cache: bool):
+    cfg = ctx.cfg
+    x, pos, _ = _embed_inputs(params, batch, ctx)
+    shared = params["shared"]
+
+    def group(x, p_g):
+        def mamba_layer(x, p_l):
+            y, (conv, ssm) = ssm_mod.mamba2_chunked(
+                p_l["m"], rmsnorm(p_l["ln"], x, cfg.norm_eps), ctx)
+            return x + y, ((conv, ssm) if return_cache else None)
+
+        x, states = _scan(mamba_layer, x, p_g, cfg)
+        x, (k, v) = _shared_attn_block(shared, x, ctx, pos)
+        return x, ((states, (k, v)) if return_cache else None)
+
+    x, packed = _scan(group, x, params["mamba"], cfg)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    cache = None
+    if return_cache:
+        states, kv = packed
+        cache = {"conv": states[0], "ssm": states[1], "k": kv[0], "v": kv[1],
+                 "pos": jnp.full((x.shape[0],), x.shape[1], jnp.int32)}
+    return h, cache, jnp.zeros((), jnp.float32)
+
+
+def _forward_rwkv(params, batch, ctx: Ctx, return_cache: bool):
+    cfg = ctx.cfg
+    x, _, _ = _embed_inputs(params, batch, ctx)
+
+    def body(x, p):
+        t, (tshift, wkv) = ssm_mod.rwkv6_time_mix(
+            p["time"], layernorm(p["ln1"], x, cfg.norm_eps), ctx)
+        x = x + t
+        c, cshift = ssm_mod.rwkv6_channel_mix(
+            p["channel"], layernorm(p["ln2"], x, cfg.norm_eps), ctx)
+        x = x + c
+        return x, ((tshift, wkv, cshift) if return_cache else None)
+
+    x, states = _scan(body, x, params["layers"], cfg)
+    h = layernorm(params["final_norm"], x, cfg.norm_eps)
+    cache = None
+    if return_cache:
+        cache = {"tshift": states[0], "wkv": states[1], "cshift": states[2],
+                 "pos": jnp.full((x.shape[0],), x.shape[1], jnp.int32)}
+    return h, cache, jnp.zeros((), jnp.float32)
+
+
+# =====================================================================
+# Loss
+# =====================================================================
+
+def loss_fn(params, batch, ctx: Ctx):
+    """Mean CE over label positions (+ MoE aux). Returns (loss, metrics)."""
+    cfg = ctx.cfg
+    h, _, aux = forward(params, batch, ctx)
+    if cfg.family == "vlm":  # loss on text positions only
+        h = h[:, cfg.n_patches:, :]
+    labels = batch["labels"]
+    weights = batch.get("weights")
+    if weights is None:
+        weights = jnp.ones(labels.shape, jnp.float32)
+    un = unembed_matrix(params["embed"], ctx)
+    sum_loss, sum_w = chunked_softmax_xent(h, un, labels, weights, ctx)
+    ce = sum_loss / jnp.maximum(sum_w, 1.0)
+    return ce + aux, {"ce": ce, "aux": aux, "tokens": sum_w}
+
+
+# =====================================================================
+# Decode caches
+# =====================================================================
+
+def cache_spec(cfg: ModelConfig, batch_size: int, max_len: int) -> dict[str, Any]:
+    """ShapeDtypeStructs for the decode cache (also defines the structure)."""
+    dt = jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+    B, L = batch_size, cfg.n_layers
+    KV, Dh = cfg.n_kv_heads, cfg.resolved_head_dim()
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    fam = cfg.family
+    out: dict[str, Any] = {"pos": sds((B,), jnp.int32)}
+    if fam in ("dense", "moe", "vlm"):
+        out["k"] = sds((L, B, max_len, KV, Dh), dt)
+        out["v"] = sds((L, B, max_len, KV, Dh), dt)
+    elif fam == "audio":
+        out["k"] = sds((L, B, max_len, KV, Dh), dt)
+        out["v"] = sds((L, B, max_len, KV, Dh), dt)
+        out["xk"] = sds((L, B, cfg.enc_seq, KV, Dh), dt)
+        out["xv"] = sds((L, B, cfg.enc_seq, KV, Dh), dt)
+    elif fam == "hybrid":
+        G, per = _zamba_groups(cfg)
+        H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_dim = H * P + 2 * N
+        out["conv"] = sds((G, per, B, cfg.d_conv - 1, conv_dim), dt)
+        out["ssm"] = sds((G, per, B, H, P, N), f32)
+        out["k"] = sds((G, B, max_len, KV, Dh), dt)
+        out["v"] = sds((G, B, max_len, KV, Dh), dt)
+    elif fam == "ssm":
+        D = cfg.d_model
+        H, C = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+        out["tshift"] = sds((L, B, D), dt)
+        out["cshift"] = sds((L, B, D), dt)
+        out["wkv"] = sds((L, B, H, C, C), f32)
+    return out
+
+
+CACHE_AXES = {
+    "pos": ("batch",),
+    "k": ("layers", "batch", "kv_len", "kv_heads", "qkv"),
+    "v": ("layers", "batch", "kv_len", "kv_heads", "qkv"),
+    "xk": ("layers", "batch", "kv_len", "kv_heads", "qkv"),
+    "xv": ("layers", "batch", "kv_len", "kv_heads", "qkv"),
+    "conv": ("layers", None, "batch", None, "heads"),
+    "ssm": ("layers", None, "batch", "heads", None, None),
+    "tshift": ("layers", "batch", "embed_act"),
+    "cshift": ("layers", "batch", "embed_act"),
+    "wkv": ("layers", "batch", "heads", None, None),
+}
+
+
+def cache_axes(cfg: ModelConfig) -> dict[str, tuple]:
+    return {k: CACHE_AXES[k] for k in cache_spec(cfg, 1, 8)}
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch_size, max_len))
+
+
+def _cache_insert(cache_l, new, pos):
+    """cache_l: (B, Smax, KV, Dh); new: (B, 1, KV, Dh); pos: (B,) int32."""
+    def ins(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n.astype(c.dtype), (p, 0, 0))
+    return jax.vmap(ins)(cache_l, new, pos)
+
+
+# =====================================================================
+# Decode step (one new token) per family
+# =====================================================================
+
+def decode_step(params, batch, cache, ctx: Ctx):
+    """batch: {'token': (B,1) int32}. Returns (logits (B,V) fp32, new cache)."""
+    cfg = ctx.cfg
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        h, cache = _decode_attn(params, batch, cache, ctx)
+    elif fam == "audio":
+        h, cache = _decode_whisper(params, batch, cache, ctx)
+    elif fam == "hybrid":
+        h, cache = _decode_zamba(params, batch, cache, ctx)
+    elif fam == "ssm":
+        h, cache = _decode_rwkv(params, batch, cache, ctx)
+    else:
+        raise ValueError(fam)
+    logits = logits_last(h[:, -1, :], unembed_matrix(params["embed"], ctx), ctx)
+    return logits, cache
+
+
+def _decode_embed(params, batch, cache, ctx: Ctx):
+    x = embed(params["embed"], batch["token"], ctx)  # (B, 1, D)
+    pos = cache["pos"]  # (B,) index where this token is written
+    if ctx.cfg.family == "audio":
+        x = x + jax.vmap(lambda p: _sinusoid_at(p, ctx.cfg.d_model))(pos)[:, None, :].astype(x.dtype)
+    if ctx.cfg.family == "ssm":
+        x = layernorm(params["ln0"], x, ctx.cfg.norm_eps)
+    return x, pos
+
+
+def _sinusoid_at(p, D: int):
+    dim = jnp.arange(D // 2, dtype=jnp.float32)
+    ang = p.astype(jnp.float32) / jnp.power(10_000.0, 2.0 * dim / D)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _decode_attn(params, batch, cache, ctx: Ctx):
+    cfg = ctx.cfg
+    x, pos = _decode_embed(params, batch, cache, ctx)
+    pos2 = pos[:, None]  # (B, 1)
+
+    def body(x, xs):
+        p, k_c, v_c = xs
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        q, k, v = qkv_project(p["attn"], h, h, ctx, pos2, pos2)
+        k_c = _cache_insert(k_c, k, pos)
+        v_c = _cache_insert(v_c, v, pos)
+        a = decode_attention(q, k_c, v_c, pos, ctx)
+        a = out_project(p["attn"], a, ctx)
+        if cfg.parallel_block:
+            m = moe_block(p["moe"], h, ctx)[0] if "moe" in p else mlp(p["mlp"], h, ctx)
+            x = x + a + m
+        else:
+            x = x + a
+            h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+            m = moe_block(p["moe"], h2, ctx)[0] if "moe" in p else mlp(p["mlp"], h2, ctx)
+            x = x + m
+        return x, (k_c, v_c)
+
+    x, (k_new, v_new) = _scan(body, x, (params["layers"], cache["k"], cache["v"]), cfg)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return h, dict(cache, k=k_new, v=v_new, pos=pos + 1)
+
+
+def _decode_whisper(params, batch, cache, ctx: Ctx):
+    cfg = ctx.cfg
+    x, pos = _decode_embed(params, batch, cache, ctx)
+    pos2 = pos[:, None]
+
+    def body(x, xs):
+        p, k_c, v_c, xk, xv = xs
+        h = layernorm(p["ln1"], x, cfg.norm_eps)
+        q, k, v = qkv_project(p["self_attn"], h, h, ctx, pos2, pos2, use_rope=False)
+        k_c = _cache_insert(k_c, k, pos)
+        v_c = _cache_insert(v_c, v, pos)
+        x = x + out_project(p["self_attn"], decode_attention(q, k_c, v_c, pos, ctx), ctx)
+        h = layernorm(p["ln2"], x, cfg.norm_eps)
+        cq, _, _ = qkv_project(p["cross_attn"], h, h[:, :0], ctx, use_rope=False)
+        ca = decode_attention(cq, xk, xv, pos, ctx, valid_len=cfg.enc_seq)
+        x = x + out_project(p["cross_attn"], ca, ctx)
+        x = x + mlp(p["mlp"], layernorm(p["ln3"], x, cfg.norm_eps), ctx)
+        return x, (k_c, v_c)
+
+    x, (k_new, v_new) = _scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]), cfg)
+    h = layernorm(params["final_norm"], x, cfg.norm_eps)
+    return h, dict(cache, k=k_new, v=v_new, pos=pos + 1)
+
+
+def _decode_zamba(params, batch, cache, ctx: Ctx):
+    cfg = ctx.cfg
+    x, pos = _decode_embed(params, batch, cache, ctx)
+    shared = params["shared"]
+
+    def group(x, xs):
+        p_g, conv_g, ssm_g, k_c, v_c = xs
+
+        def mamba_layer(x, xs_l):
+            p_l, conv, ssmst = xs_l
+            y, (conv2, ssm2) = ssm_mod.mamba2_step(
+                p_l["m"], rmsnorm(p_l["ln"], x, cfg.norm_eps), ctx, conv, ssmst)
+            return x + y, (conv2, ssm2)
+
+        x, (conv2, ssm2) = _scan(mamba_layer, x, (p_g, conv_g, ssm_g), cfg)
+        h = rmsnorm(shared["ln1"], x, cfg.norm_eps)
+        q, k, v = qkv_project(shared["attn"], h, h, ctx, pos[:, None], pos[:, None])
+        k_c = _cache_insert(k_c, k, pos)
+        v_c = _cache_insert(v_c, v, pos)
+        x = x + out_project(shared["attn"], decode_attention(q, k_c, v_c, pos, ctx), ctx)
+        x = x + mlp(shared["mlp"], rmsnorm(shared["ln2"], x, cfg.norm_eps), ctx)
+        return x, (conv2, ssm2, k_c, v_c)
+
+    x, (conv_n, ssm_n, k_n, v_n) = _scan(
+        group, x, (params["mamba"], cache["conv"], cache["ssm"], cache["k"], cache["v"]), cfg)
+    h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return h, dict(cache, conv=conv_n, ssm=ssm_n, k=k_n, v=v_n, pos=pos + 1)
+
+
+def _decode_rwkv(params, batch, cache, ctx: Ctx):
+    cfg = ctx.cfg
+    x, pos = _decode_embed(params, batch, cache, ctx)
+
+    def body(x, xs):
+        p, tsh, wkv, csh = xs
+        t, (tsh2, wkv2) = ssm_mod.rwkv6_time_step(
+            p["time"], layernorm(p["ln1"], x, cfg.norm_eps), ctx, tsh, wkv)
+        x = x + t
+        c, csh2 = ssm_mod.rwkv6_channel_mix(
+            p["channel"], layernorm(p["ln2"], x, cfg.norm_eps), ctx, csh)
+        x = x + c
+        return x, (tsh2, wkv2, csh2)
+
+    x, (tsh_n, wkv_n, csh_n) = _scan(
+        body, x, (params["layers"], cache["tshift"], cache["wkv"], cache["cshift"]), cfg)
+    h = layernorm(params["final_norm"], x, cfg.norm_eps)
+    return h, dict(cache, tshift=tsh_n, wkv=wkv_n, cshift=csh_n, pos=pos + 1)
+
+
+def prefill(params, batch, ctx: Ctx):
+    """Full-sequence prefill: returns (last-token logits (B,V), cache)."""
+    h, cache, _ = forward(params, batch, ctx, return_cache=True)
+    logits = logits_last(h[:, -1, :], unembed_matrix(params["embed"], ctx), ctx)
+    return logits, cache
+
+
+# =====================================================================
+# Batch specs (ShapeDtypeStructs for AOT lowering) + logical axes
+# =====================================================================
+
+BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "weights": ("batch", "seq"),
+    "patches": ("batch", "seq", "embed_act"),
+    "frames": ("batch", "kv_len", "embed_act"),
+    "token": ("batch", None),
+}
+
+
+def batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Model inputs for a given assigned shape, as ShapeDtypeStructs."""
+    sds = jax.ShapeDtypeStruct
+    B, S = shape.global_batch, shape.seq_len
+    i32, dt = jnp.int32, jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"token": sds((B, 1), i32)}
+    out: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        S_text = S - cfg.n_patches
+        out["patches"] = sds((B, cfg.n_patches, cfg.d_model), dt)
+        out["tokens"] = sds((B, S_text), i32)
+        if shape.kind == "train":
+            out["labels"] = sds((B, S_text), i32)
+        return out
+    if cfg.family == "audio":
+        out["frames"] = sds((B, cfg.enc_seq, cfg.d_model), dt)
+    out["tokens"] = sds((B, S), i32)
+    if shape.kind == "train":
+        out["labels"] = sds((B, S), i32)
+    return out
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, tuple]:
+    return {k: BATCH_AXES[k] for k in batch_spec(cfg, shape)}
+
+
+def make_batch(key, cfg: ModelConfig, shape: ShapeConfig):
+    """Random concrete batch matching batch_spec (for smoke tests/examples)."""
+    spec = batch_spec(cfg, shape)
+    out = {}
+    for name, s in spec.items():
+        key, k = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype) * 0.02
+    return out

@@ -1,0 +1,109 @@
+"""GShard/Switch-style MoE with capacity-based one-hot dispatch einsums.
+
+TPU-native formulation: routing produces dense (group, token, expert, capacity)
+dispatch/combine tensors consumed by einsums — these lower to all-to-alls under
+GSPMD when the expert dim is sharded over 'data' (EP) and the group dim is
+sharded over 'data' on the token side.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx, _act
+from repro.models.params import ParamSpec
+
+
+def moe_schema(cfg: ModelConfig) -> dict:
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    gated = cfg.act in ("swiglu", "geglu")
+    sch = {
+        "router": ParamSpec((D, E), ("embed", None), dtype="float32"),
+        "w_in": ParamSpec((E, D, F), ("expert", "embed", "expert_mlp")),
+        "w_out": ParamSpec((E, F, D), ("expert", "expert_mlp", "embed")),
+    }
+    if gated:
+        sch["w_gate"] = ParamSpec((E, D, F), ("expert", "embed", "expert_mlp"))
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * cfg.moe_d_ff
+        sch["shared"] = {
+            "w_in": ParamSpec((D, Fs), ("embed", "mlp")),
+            "w_out": ParamSpec((Fs, D), ("mlp", "embed")),
+        }
+        if gated:
+            sch["shared"]["w_gate"] = ParamSpec((D, Fs), ("embed", "mlp"))
+        sch["shared_gate"] = ParamSpec((D, 1), ("embed", None))
+    return sch
+
+
+def _top_k_dispatch(gates, k: int, capacity: int):
+    """gates: (G, T, E) fp32 -> dispatch (G,T,E,C) bool-ish, combine (G,T,E,C)."""
+    G, T, E = gates.shape
+    topv, topi = jax.lax.top_k(gates, k)                     # (G, T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)      # (G, T, k, E)
+    # Capacity slots: priority by (k-slot, token index): flatten (T, k) -> Tk,
+    # k-major order so first choices beat second choices at equal position.
+    oh_flat = onehot.transpose(0, 2, 1, 3).reshape(G, k * T, E)
+    pos = jnp.cumsum(oh_flat, axis=1) - oh_flat              # slots before me
+    pos = pos.reshape(G, k, T, E).transpose(0, 2, 1, 3)      # (G, T, k, E)
+    pos = (pos * onehot).sum(-1)                             # (G, T, k)
+    keep = (pos < capacity).astype(jnp.float32) * (topv > 0)
+    slot_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                             dtype=jnp.float32)  # (G, T, k, C)
+    disp = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, slot_oh, keep)
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, slot_oh, keep * topv)
+    return disp, comb
+
+
+def moe_block(p, x, ctx: Ctx):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    from repro.models.layers import largest_divisor_leq
+    T = largest_divisor_leq(B * S, cfg.moe_group_size)
+    G = (B * S) // T
+    cap = max(4, int(cfg.capacity_factor * T * k / E))
+    xt = x.reshape(G, T, D)
+    xt = ctx.constrain(xt, ("expert_group", None, "embed_act"))
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    disp, comb = _top_k_dispatch(gates, k, cap)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    f_e = disp.sum(axis=(1, 3)) / T                          # (G, E) dispatched frac
+    p_e = gates.mean(axis=1)                                 # (G, E)
+    aux = (E * (f_e * p_e).sum(-1)).mean() * cfg.router_aux_weight
+
+    dt = x.dtype
+    disp = disp.astype(dt)
+    expert_in = jnp.einsum("gtec,gtd->egcd", disp, xt)       # all-to-all (EP)
+    # Constrain the GROUP dim (kept sharded over data/pod) as well as the
+    # expert dim: when E doesn't divide the expert axis the expert dim drops
+    # to replicated, and without the group constraint GSPMD would insert a
+    # full all-gather of the dispatched activations (measured 60-160s of
+    # collective time on the MoE train cells — see EXPERIMENTS.md §Perf).
+    expert_in = ctx.constrain(expert_in, ("expert", "expert_group", None, "embed_act"))
+    h = jnp.einsum("egcd,edf->egcf", expert_in, p["w_in"].astype(dt))
+    h = ctx.constrain(h, ("expert", "expert_group", None, "expert_mlp"))
+    if "w_gate" in p:
+        g = jnp.einsum("egcd,edf->egcf", expert_in, p["w_gate"].astype(dt))
+        h = _act(cfg.act, g) * h
+    else:
+        h = _act(cfg.act, h)
+    eo = jnp.einsum("egcf,efd->egcd", h, p["w_out"].astype(dt))
+    eo = ctx.constrain(eo, ("expert", "expert_group", None, "embed_act"))
+    out = jnp.einsum("gtec,egcd->gtd", comb.astype(dt), eo)  # all-to-all back
+    out = ctx.constrain(out, ("expert_group", None, "embed_act"))
+    out = out.reshape(B, S, D)
+
+    if "shared" in p:
+        from repro.models.layers import mlp
+        shared = mlp(p["shared"], x, ctx)
+        sg = jax.nn.sigmoid(
+            jnp.einsum("bsd,do->bso", x.astype(jnp.float32), p["shared_gate"].astype(jnp.float32)))
+        out = out + shared * sg.astype(dt)
+    return ctx.constrain(out, ("batch", "seq", "embed_act")), aux

@@ -1,0 +1,82 @@
+"""Param schema: one declaration yields init values, ShapeDtypeStructs (for AOT
+dry-runs) and logical sharding axes. No flax — params are plain nested dicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis per dim
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float = 1.0
+    dtype: str | None = None      # override param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = dict[str, Any]  # nested dict with ParamSpec leaves
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def map_schema(fn: Callable[[ParamSpec], Any], schema: Schema):
+    return jax.tree.map(fn, schema, is_leaf=is_spec)
+
+
+def schema_axes(schema: Schema):
+    return map_schema(lambda s: s.axes, schema)
+
+
+def schema_shapes(schema: Schema, default_dtype: str):
+    return map_schema(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or default_dtype)),
+        schema,
+    )
+
+
+def schema_n_params(schema: Schema) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(schema, is_leaf=is_spec):
+        total += int(np.prod(leaf.shape))
+    return total
+
+
+def init_params(key: jax.Array, schema: Schema, default_dtype: str):
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = []
+    for k, spec in zip(keys, leaves):
+        dtype = jnp.dtype(spec.dtype or default_dtype)
+        if spec.init == "zeros":
+            v = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            v = jnp.ones(spec.shape, dtype)
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.scale / math.sqrt(max(1, fan_in))
+            if spec.init == "embed":
+                std = spec.scale
+            v = (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+        vals.append(v)
+    return jax.tree.unflatten(treedef, vals)
+
+
+def stack_layers(n: int, schema: Schema) -> Schema:
+    """Prefix every spec with a leading scanned 'layers' dim."""
+    return map_schema(
+        lambda s: dataclasses.replace(s, shape=(n,) + s.shape, axes=("layers",) + s.axes),
+        schema,
+    )

@@ -1,0 +1,320 @@
+"""Sub-quadratic sequence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both ship two forms sharing weights:
+  * chunked-parallel (train / prefill): scan over sequence chunks carrying the
+    recurrent state; within-chunk terms are dense matmuls (MXU-friendly).
+  * single-step recurrence (decode): O(1) state update.
+Reference naive recurrences live in tests and must match the chunked forms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Ctx, rmsnorm
+from repro.models.params import ParamSpec
+
+# =====================================================================
+# Mamba2 / SSD
+# =====================================================================
+
+def mamba2_schema(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    inner = H * P
+    conv_dim = inner + 2 * N
+    return {
+        "in_proj": ParamSpec((D, 2 * inner + 2 * N + H), ("embed", "heads")),
+        "conv_w": ParamSpec((cfg.d_conv, conv_dim), ("conv", "heads")),
+        "conv_b": ParamSpec((conv_dim,), ("heads",), init="zeros"),
+        "A_log": ParamSpec((H,), ("heads",), init="zeros"),
+        "D": ParamSpec((H,), ("heads",), init="ones"),
+        "dt_bias": ParamSpec((H,), ("heads",), init="zeros"),
+        "norm": ParamSpec((inner,), ("heads",), init="ones"),
+        "out_proj": ParamSpec((inner, D), ("heads", "embed")),
+    }
+
+
+def _mamba2_project(p, x, ctx: Ctx):
+    cfg = ctx.cfg
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    inner = H * P
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [inner, 2 * inner, 2 * inner + N, 2 * inner + 2 * N], axis=-1)
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """xbc: (B, S, C); conv_w: (K, C) depthwise causal conv.
+
+    conv_state: (B, K-1, C) trailing inputs from the previous segment (decode).
+    Returns (y, new_conv_state).
+    """
+    K = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i:i + xbc.shape[1], :] * conv_w[i][None, None, :].astype(xbc.dtype)
+            for i in range(K))
+    y = jax.nn.silu(y + conv_b.astype(xbc.dtype))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad
+    return y, new_state
+
+
+def mamba2_chunked(p, x, ctx: Ctx, conv_state=None, ssm_state=None):
+    """x: (B, S, D) -> (y (B, S, D), (conv_state, ssm_state))."""
+    cfg = ctx.cfg
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    B, S, D = x.shape
+    from repro.models.layers import largest_divisor_leq
+    inner = H * P
+    Q = largest_divisor_leq(S, cfg.ssm_chunk)
+    nc = S // Q
+
+    z, xin, Bc, Cc, dt = _mamba2_project(p, x, ctx)
+    xbc = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xin, Bc, Cc = jnp.split(xbc, [inner, inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    loga = -dt * jnp.exp(p["A_log"].astype(jnp.float32))  # log decay per step, <= 0
+    xh = xin.reshape(B, S, H, P)
+    xdt = xh.astype(jnp.float32) * dt[..., None]  # input scaled by dt
+
+    # chunk views
+    xdt_c = xdt.reshape(B, nc, Q, H, P)
+    B_c = Bc.reshape(B, nc, Q, N).astype(jnp.float32)
+    C_c = Cc.reshape(B, nc, Q, N).astype(jnp.float32)
+    loga_c = loga.reshape(B, nc, Q, H)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def body(h, xs):
+        xb, Bk, Ck, la = xs  # (B,Q,H,P), (B,Q,N), (B,Q,N), (B,Q,H)
+        cum = jnp.cumsum(la, axis=1)              # (B,Q,H) inclusive
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", Ck, h) * jnp.exp(cum)[..., None]
+        # intra-chunk: masked pairwise decays
+        dmat = cum[:, :, None, :] - cum[:, None, :, :]  # (B,Q,K,H) = cum_q - cum_k
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        dmat = jnp.where(mask[None, :, :, None], jnp.exp(dmat), 0.0)
+        sc = jnp.einsum("bqn,bkn->bqk", Ck, Bk)
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", sc, dmat, xb)
+        # state update: h' = decay_total * h + sum_k exp(cum_last - cum_k) B_k xb_k
+        dk = jnp.exp(cum[:, -1:, :] - cum)        # (B,Q,H)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + \
+            jnp.einsum("bkn,bkh,bkhp->bhpn", Bk, dk, xb)
+        return h_new, y_inter + y_intra
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xdt_c, B_c, C_c, loga_c))
+    h_final, ys = jax.lax.scan(body, ssm_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return ctx.constrain(out, ("batch", "seq", "embed_act")), (new_conv, h_final)
+
+
+def mamba2_step(p, x, ctx: Ctx, conv_state, ssm_state):
+    """Single-token decode. x: (B, 1, D). States as in mamba2_chunked."""
+    cfg = ctx.cfg
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    B = x.shape[0]
+    inner = H * P
+    z, xin, Bc, Cc, dt = _mamba2_project(p, x, ctx)
+    xbc = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xin, Bc, Cc = jnp.split(xbc, [inner, inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"].astype(jnp.float32)))          # (B,H)
+    xh = xin[:, 0].reshape(B, H, P).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    Bk = Bc[:, 0].astype(jnp.float32)  # (B,N)
+    Ck = Cc[:, 0].astype(jnp.float32)
+    h_new = a[:, :, None, None] * ssm_state + jnp.einsum("bn,bhp->bhpn", Bk, xdt)
+    y = jnp.einsum("bn,bhpn->bhp", Ck, h_new)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, (new_conv, h_new)
+
+
+# =====================================================================
+# RWKV6 (Finch)
+# =====================================================================
+
+def rwkv6_schema(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    C = cfg.rwkv_head_dim
+    lora = max(32, D // 16)
+    return {
+        "time": {
+            "mu_r": ParamSpec((D,), ("embed_act",), init="zeros"),
+            "mu_k": ParamSpec((D,), ("embed_act",), init="zeros"),
+            "mu_v": ParamSpec((D,), ("embed_act",), init="zeros"),
+            "mu_w": ParamSpec((D,), ("embed_act",), init="zeros"),
+            "mu_g": ParamSpec((D,), ("embed_act",), init="zeros"),
+            "wr": ParamSpec((D, D), ("embed", "heads")),
+            "wk": ParamSpec((D, D), ("embed", "heads")),
+            "wv": ParamSpec((D, D), ("embed", "heads")),
+            "wg": ParamSpec((D, D), ("embed", "heads")),
+            "wo": ParamSpec((D, D), ("heads", "embed")),
+            "w0": ParamSpec((D,), ("embed_act",), init="zeros"),
+            "w_lora_a": ParamSpec((D, lora), ("embed", None)),
+            "w_lora_b": ParamSpec((lora, D), (None, "heads")),
+            "u": ParamSpec((H, C), ("heads", None), init="zeros"),
+            "ln_scale": ParamSpec((D,), ("embed_act",), init="ones"),
+            "ln_bias": ParamSpec((D,), ("embed_act",), init="zeros"),
+        },
+        "channel": {
+            "mu_k": ParamSpec((D,), ("embed_act",), init="zeros"),
+            "mu_r": ParamSpec((D,), ("embed_act",), init="zeros"),
+            "wk": ParamSpec((D, cfg.d_ff), ("embed", "mlp")),
+            "wv": ParamSpec((cfg.d_ff, D), ("mlp", "embed")),
+            "wr": ParamSpec((D, D), ("embed", "heads")),
+        },
+    }
+
+
+def _token_shift(x, shift_state):
+    """x: (B, S, D); shift_state: (B, D) last token of previous segment."""
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def _rwkv_time_inputs(p, x, prev, ctx: Ctx):
+    cfg = ctx.cfg
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    C = cfg.rwkv_head_dim
+    dt = x.dtype
+
+    def mix(mu):
+        return x + (prev - x) * mu.astype(dt)
+
+    r = jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["wr"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", mix(p["mu_k"]), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", mix(p["mu_v"]), p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix(p["mu_g"]), p["wg"].astype(dt)))
+    xw = mix(p["mu_w"])
+    w_dd = jnp.einsum("bsd,dl->bsl", xw, p["w_lora_a"].astype(dt))
+    w_dd = jnp.einsum("bsl,ld->bsd", jnp.tanh(w_dd), p["w_lora_b"].astype(dt))
+    logw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) + w_dd.astype(jnp.float32),
+                             -8.0, 4.0))  # (B,S,D), in (-inf, 0)
+    B_, S, _ = x.shape
+    shp = (B_, S, H, C)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp), g, logw.reshape(shp))
+
+
+def rwkv6_time_mix(p, x, ctx: Ctx, shift_state=None, wkv_state=None):
+    """x: (B, S, D) -> (out, (shift_state, wkv_state)). Chunked-parallel form."""
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    from repro.models.layers import largest_divisor_leq
+    H, C = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    Q = largest_divisor_leq(S, cfg.rwkv_chunk)
+    nc = S // Q
+    if shift_state is None:
+        shift_state = jnp.zeros((B, D), x.dtype)
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, C, C), jnp.float32)
+
+    prev = _token_shift(x, shift_state)
+    r, k, v, g, logw = _rwkv_time_inputs(p, x, prev, ctx)
+    u = p["u"].astype(jnp.float32)
+
+    r_c = r.reshape(B, nc, Q, H, C).astype(jnp.float32)
+    k_c = k.reshape(B, nc, Q, H, C).astype(jnp.float32)
+    v_c = v.reshape(B, nc, Q, H, C).astype(jnp.float32)
+    w_c = logw.reshape(B, nc, Q, H, C)
+
+    def body(state, xs):
+        rq, kq, vq, lw = xs  # (B,Q,H,C) each
+        cum = jnp.cumsum(lw, axis=1)  # inclusive cumulative log-decay
+        # inter-chunk: state contribution decayed to position q (decay applied
+        # over steps 1..q, exclusive of q's own w? RWKV applies w before adding
+        # token q's kv, so state seen by q is decayed by prod_{i<=q-1} w_i ...
+        # with cum_ex = cum - lw (exclusive cumsum).
+        cum_ex = cum - lw
+        y_inter = jnp.einsum("bqhc,bhcp->bqhp", rq * jnp.exp(cum_ex), state)
+        # intra-chunk: token j<q contributes decay prod_{i=j+1}^{q-1} w_i
+        dmat = cum_ex[:, :, None] - cum[:, None, :]  # (B,Q,K,H,C): cum_ex_q - cum_k
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+        A = jnp.where(mask[None, :, :, None, None], jnp.exp(dmat), 0.0)
+        sc = jnp.einsum("bqhc,bqkhc,bkhc->bqkh", rq, A, kq)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", sc, vq)
+        # current token bonus: u
+        y_diag = jnp.einsum("bqhc,bqhc->bqh", rq, u[None, None] * kq)[..., None] * vq
+        # state update to end of chunk
+        dk = jnp.exp(cum[:, -1:] - cum)  # decay from step k(+1) to chunk end
+        s_new = jnp.exp(cum[:, -1])[..., None] * state + \
+            jnp.einsum("bkhc,bkhp->bhcp", kq * dk, vq)
+        return s_new, y_inter + y_intra + y_diag
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r_c, k_c, v_c, w_c))
+    s_final, ys = jax.lax.scan(body, wkv_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D).astype(x.dtype)
+    # group norm over heads (ln_x in rwkv): normalize per head
+    yh = y.reshape(B, S, H, C).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(B, S, D) * p["ln_scale"].astype(jnp.float32)
+         + p["ln_bias"].astype(jnp.float32)).astype(x.dtype)
+    y = y * g
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(x.dtype))
+    out = ctx.constrain(out, ("batch", "seq", "embed_act"))
+    return out, (x[:, -1, :], s_final)
+
+
+def rwkv6_time_step(p, x, ctx: Ctx, shift_state, wkv_state):
+    """Single-token decode. x: (B, 1, D)."""
+    cfg = ctx.cfg
+    B, _, D = x.shape
+    H, C = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    prev = shift_state[:, None, :]
+    r, k, v, g, logw = _rwkv_time_inputs(p, x, prev, ctx)
+    r1, k1, v1 = (a[:, 0].astype(jnp.float32) for a in (r, k, v))
+    w1 = jnp.exp(logw[:, 0])  # (B,H,C)
+    u = p["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhc,bhp->bhcp", k1, v1)
+    y = jnp.einsum("bhc,bhcp->bhp", r1, wkv_state + u[None, ..., None] * kv)
+    s_new = w1[..., None] * wkv_state + kv
+    yh = y.reshape(B, 1, H, C)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(B, 1, D) * p["ln_scale"].astype(jnp.float32)
+         + p["ln_bias"].astype(jnp.float32)).astype(x.dtype)
+    y = y * g
+    out = jnp.einsum("bsd,de->bse", y, p["wo"].astype(x.dtype))
+    return out, (x[:, -1, :], s_new)
+
+
+def rwkv6_channel_mix(p, x, ctx: Ctx, shift_state=None):
+    """RWKV channel-mix FFN with token shift. x: (B,S,D)."""
+    if shift_state is None:
+        shift_state = jnp.zeros((x.shape[0], x.shape[2]), x.dtype)
+    prev = _token_shift(x, shift_state)
+    dt = x.dtype
+
+    def mix(mu):
+        return x + (prev - x) * mu.astype(dt)
+
+    k = jnp.einsum("bsd,df->bsf", mix(p["mu_k"]), p["wk"].astype(dt))
+    k = jnp.square(jax.nn.relu(k))
+    vv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["wr"].astype(dt)))
+    out = ctx.constrain(rr * vv, ("batch", "seq", "embed_act"))
+    return out, x[:, -1, :]

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    global_norm,
+    lr_schedule,
+    make_optimizer,
+    opt_slot_specs,
+)

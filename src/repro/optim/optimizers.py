@@ -1,0 +1,175 @@
+"""Optimizers: AdamW and Adafactor (factored second moment for >=2-D params —
+required to fit the 314B-param grok-1 optimizer state in 16 GB/chip), global
+gradient-norm clipping, warmup+cosine schedule.
+
+State layout: ``slots`` mirrors the param tree with each array leaf replaced by
+a dict of slot arrays; ``opt_slot_specs`` produces the matching
+ShapeDtypeStruct + logical-axes trees so AOT dry-runs can shard the state
+without materializing it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]                  # params -> slots
+    update: Callable[[Any, Any, Any, Any], tuple[Any, Any]]
+    # update(grads, slots, params, step) -> (new_params, new_slots)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm
+
+
+def lr_schedule(cfg: ModelConfig, warmup: int = 100, total: int = 10_000):
+    base = cfg.learning_rate
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = base * (step + 1.0) / warmup
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = base * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+# --------------------------------------------------------------- map helpers
+
+def _apply_leafwise(leaf_fn, params, grads, slots):
+    """Apply leaf_fn(g, s, p) over the param tree; slots leaves are dicts.
+    Returns (new_params, new_slots)."""
+    leaves, treedef = jax.tree.flatten(params)
+    g_flat = treedef.flatten_up_to(grads)
+    s_flat = treedef.flatten_up_to(slots)
+    out = [leaf_fn(g, s, p) for g, s, p in zip(g_flat, s_flat, leaves)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_s = treedef.unflatten([o[1] for o in out])
+    return new_p, new_s
+
+
+# --------------------------------------------------------------- AdamW
+
+def _adamw(cfg: ModelConfig, b1=0.9, b2=0.95, eps=1e-8) -> Optimizer:
+    sched = lr_schedule(cfg)
+    wd = cfg.weight_decay
+
+    def init(params):
+        return jax.tree.map(
+            lambda p: {"m": jnp.zeros(p.shape, jnp.float32),
+                       "v": jnp.zeros(p.shape, jnp.float32)}, params)
+
+    def update(grads, slots, params, step):
+        lr = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            m = b1 * s["m"] + (1 - b1) * g
+            v = b2 * s["v"] + (1 - b2) * jnp.square(g)
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            decay = wd * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            newp = (p.astype(jnp.float32) - lr * (upd + decay)).astype(p.dtype)
+            return newp, {"m": m, "v": v}
+
+        return _apply_leafwise(leaf, params, grads, slots)
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------- Adafactor
+
+def _adafactor(cfg: ModelConfig, eps=1e-30, clip_thresh=1.0) -> Optimizer:
+    """Factored second moment over the trailing two dims; leading dims
+    (scanned layers, experts) are kept, so slot size ~ O(rows + cols)."""
+    sched = lr_schedule(cfg)
+    wd = cfg.weight_decay
+    b2_base = 0.999
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(leaf, params)
+
+    def update(grads, slots, params, step):
+        lr = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        b2 = 1.0 - t ** -0.8  # Shazeer & Stern decay schedule
+        bc = 1.0 - b2_base ** t  # mild bias correction for stability
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = b2 * s["vr"] + (1 - b2) * g2.mean(axis=-1)
+                vc = b2 * s["vc"] + (1 - b2) * g2.mean(axis=-2)
+                denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+                upd = g * jax.lax.rsqrt(vhat + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = b2 * s["v"] + (1 - b2) * g2
+                upd = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping by RMS (Adafactor's d=1.0 rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_thresh)
+            decay = wd * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            newp = (p.astype(jnp.float32) - lr * (upd + decay)).astype(p.dtype)
+            return newp, new_s
+
+        return _apply_leafwise(leaf, params, grads, slots)
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: ModelConfig) -> Optimizer:
+    if cfg.optimizer == "adamw":
+        return _adamw(cfg)
+    if cfg.optimizer == "adafactor":
+        return _adafactor(cfg)
+    raise ValueError(cfg.optimizer)
+
+
+# --------------------------------------------------------------- AOT specs
+
+def opt_slot_specs(cfg: ModelConfig, param_specs, param_axes):
+    """(ShapeDtypeStruct tree, logical-axes tree) for the optimizer slots,
+    mirroring what ``Optimizer.init`` would build — without allocating."""
+    sds = jax.ShapeDtypeStruct
+
+    def leaf(spec, axes):
+        if cfg.optimizer == "adamw":
+            return ({"m": sds(spec.shape, jnp.float32), "v": sds(spec.shape, jnp.float32)},
+                    {"m": tuple(axes), "v": tuple(axes)})
+        if len(spec.shape) >= 2:
+            return ({"vr": sds(spec.shape[:-1], jnp.float32),
+                     "vc": sds(spec.shape[:-2] + spec.shape[-1:], jnp.float32)},
+                    {"vr": tuple(axes[:-1]), "vc": tuple(axes[:-2] + axes[-1:])})
+        return ({"v": sds(spec.shape, jnp.float32)}, {"v": tuple(axes)})
+
+    leaves, treedef = jax.tree.flatten(param_specs)
+    ax_flat = treedef.flatten_up_to(param_axes)
+    out = [leaf(s, a) for s, a in zip(leaves, ax_flat)]
+    specs = treedef.unflatten([o[0] for o in out])
+    axes = treedef.unflatten([o[1] for o in out])
+    return specs, axes

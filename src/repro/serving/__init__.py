@@ -1,0 +1,6 @@
+from repro.serving.decode import (  # noqa: F401
+    ServeBundle,
+    make_decode_step,
+    make_prefill,
+    serve_state_specs,
+)

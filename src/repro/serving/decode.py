@@ -1,0 +1,114 @@
+"""Serving factories: prefill (full-sequence, cache-building) and decode
+(one token against a cache). Both are AOT-lowerable from ShapeDtypeStructs.
+
+``decode_32k`` / ``long_500k`` lower ``decode_step`` with a cache sized to the
+shape's seq_len; ``prefill_32k`` lowers ``prefill``. Remat is disabled for
+serving (no backward pass).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.models.layers import Ctx
+from repro.models.params import schema_axes, schema_shapes
+from repro.sharding import tree_shardings
+
+
+def _serve_cfg(cfg: ModelConfig) -> ModelConfig:
+    return cfg.replace(remat="none")
+
+
+def serve_state_specs(cfg: ModelConfig):
+    sch = lm.model_schema(cfg)
+    return schema_shapes(sch, cfg.param_dtype), schema_axes(sch)
+
+
+@dataclass(frozen=True)
+class ServeBundle:
+    fn: Callable
+    param_shardings: Any
+    batch_shardings: Any
+    cache_shardings: Any = None  # decode only
+
+    def jitted(self, donate_cache: bool = True):
+        if self.cache_shardings is not None:
+            return jax.jit(
+                self.fn,
+                in_shardings=(self.param_shardings, self.batch_shardings,
+                              self.cache_shardings),
+                donate_argnums=(2,) if donate_cache else (),
+            )
+        return jax.jit(self.fn, in_shardings=(self.param_shardings, self.batch_shardings))
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh=None, rules=None) -> ServeBundle:
+    cfg = _serve_cfg(cfg)
+    ctx = Ctx(cfg, mesh, rules)
+
+    def decode_step(params, batch, cache):
+        return lm.decode_step(params, batch, cache, ctx)
+
+    p_sh = b_sh = c_sh = None
+    if mesh is not None and rules is not None:
+        p_specs, p_axes = serve_state_specs(cfg)
+        p_sh = tree_shardings(p_axes, mesh, rules, p_specs)
+        b_sh = tree_shardings(lm.batch_axes(cfg, shape), mesh, rules,
+                              lm.batch_spec(cfg, shape))
+        c_sh = tree_shardings(lm.cache_axes(cfg), mesh, rules,
+                              lm.cache_spec(cfg, shape.global_batch, shape.seq_len))
+    return ServeBundle(decode_step, p_sh, b_sh, c_sh)
+
+
+def make_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh=None, rules=None) -> ServeBundle:
+    cfg = _serve_cfg(cfg)
+    ctx = Ctx(cfg, mesh, rules)
+
+    def prefill(params, batch):
+        return lm.prefill(params, batch, ctx)
+
+    p_sh = b_sh = None
+    if mesh is not None and rules is not None:
+        p_specs, p_axes = serve_state_specs(cfg)
+        p_sh = tree_shardings(p_axes, mesh, rules, p_specs)
+        b_sh = tree_shardings(lm.batch_axes(cfg, shape), mesh, rules,
+                              lm.batch_spec(cfg, shape))
+    return ServeBundle(prefill, p_sh, b_sh)
+
+
+def greedy_generate(params, prompt_batch, cfg: ModelConfig, n_steps: int,
+                    mesh=None, rules=None):
+    """Small convenience driver: prefill a prompt then greedy-decode n tokens.
+    Used by examples and smoke tests (CPU-sized models)."""
+    ctx = Ctx(_serve_cfg(cfg), mesh, rules)
+    B = jax.tree.leaves(prompt_batch)[0].shape[0]
+    S = prompt_batch["tokens"].shape[1] + (cfg.n_patches if cfg.family == "vlm" else 0)
+    logits, cache = lm.prefill(params, prompt_batch, ctx)
+    # grow the cache to fit generated tokens
+    full = lm.init_cache(cfg, B, S + n_steps)
+    cache = jax.tree.map(_embed_cache, full, cache)
+    tokens = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+
+    @jax.jit
+    def step(params, tok, cache):
+        logits, cache = lm.decode_step(params, {"token": tok}, cache, ctx)
+        return jnp.argmax(logits, -1).astype(jnp.int32)[:, None], cache
+
+    for _ in range(n_steps):
+        tokens.append(tok)
+        tok, cache = step(params, tok, cache)
+    return jnp.concatenate(tokens, axis=1)
+
+
+def _embed_cache(full, part):
+    """Write a prefill cache into a (larger) zeroed decode cache."""
+    if full.shape == part.shape:
+        return part
+    idx = (0,) * part.ndim
+    return jax.lax.dynamic_update_slice(full, part.astype(full.dtype), idx)

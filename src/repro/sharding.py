@@ -1,0 +1,131 @@
+"""Logical-axis sharding rules (MaxText-style) mapped onto the production mesh.
+
+Params and activations are annotated with *logical* axis names; a rules table
+maps each logical axis to zero or more physical mesh axes. This gives
+DP/FSDP/TP/EP/SP from one table, and lets the perf loop swap sharding schemes
+without touching model code.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rules. Each logical axis maps to a tuple of mesh axes (or ()).
+# "pod" only exists on the multi-pod mesh; missing axes are dropped at
+# resolution time, so one table serves both meshes.
+TRAIN_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "embed": ("data",),        # FSDP shard of params + optimizer state
+    "embed_act": (),           # activations: d_model dim left unsharded
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qkv": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("data",),       # EP: experts sharded over data (all-to-all dispatch)
+    "expert_mlp": ("model",),
+    "expert_group": ("pod", "data"),
+    "kv_len": (),
+    "layers": (),
+    "conv": (),
+    "state": (),
+}
+
+SERVE_RULES: dict[str, tuple[str, ...]] = dict(
+    TRAIN_RULES,
+    batch=("pod", "data"),
+    embed=("data",),           # weight-gathered serving; revisit per-arch in perf loop
+    # KV-cache LENGTH sharded over 'model' (flash-decoding style): validated
+    # in §Perf hillclimb #2 — decode_32k caches for large-KV archs do not fit
+    # HBM otherwise (e.g. qwen1.5-32b: 321 -> 21 GiB/dev). Non-divisible
+    # lengths (whisper cross-attn 1500) fall back to replicated automatically.
+    kv_len=("model",),
+)
+
+# long-context decode: shard the KV/cache length over 'data' (flash-decoding).
+LONG_DECODE_RULES: dict[str, tuple[str, ...]] = dict(
+    SERVE_RULES,
+    batch=(),
+    kv_len=("pod", "data"),
+    embed=("data",),
+)
+
+
+def rules_for(kind: str, *, long_context: bool = False) -> dict[str, tuple[str, ...]]:
+    if kind == "train":
+        return dict(TRAIN_RULES)
+    if long_context:
+        return dict(LONG_DECODE_RULES)
+    return dict(SERVE_RULES)
+
+
+def resolve_spec(logical: Sequence[str | None], mesh: Mesh,
+                 rules: Mapping[str, tuple[str, ...]],
+                 shape: Sequence[int] | None = None) -> P:
+    """Map logical axis names to a PartitionSpec valid on `mesh`.
+
+    If `shape` is given, mesh axes that do not divide the dimension size are
+    dropped (jit in_shardings require exact divisibility): e.g. kv_heads=2
+    cannot shard over model=16 and falls back to replication on that dim.
+    """
+    used: set[str] = set()
+    parts = []
+    for i, ax in enumerate(logical):
+        if ax is None:
+            parts.append(None)
+            continue
+        cand = [a for a in rules.get(ax, ()) if a in mesh.axis_names and a not in used]
+        phys = []
+        prod = 1
+        for a in cand:
+            n = mesh.shape[a]
+            if shape is not None and shape[i] % (prod * n) != 0:
+                continue
+            phys.append(a)
+            prod *= n
+        used.update(phys)
+        if not phys:
+            parts.append(None)
+        elif len(phys) == 1:
+            parts.append(phys[0])
+        else:
+            parts.append(tuple(phys))
+    return P(*parts)
+
+
+def named_sharding(logical: Sequence[str | None], mesh: Mesh,
+                   rules: Mapping[str, tuple[str, ...]],
+                   shape: Sequence[int] | None = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(logical, mesh, rules, shape))
+
+
+def with_logical_constraint(x: jax.Array, logical: Sequence[str | None], mesh: Mesh | None,
+                            rules: Mapping[str, tuple[str, ...]] | None) -> jax.Array:
+    """Apply a sharding constraint if running under a mesh; no-op otherwise."""
+    if mesh is None or rules is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(logical, mesh, rules, x.shape))
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x)
+
+
+def tree_shardings(logical_tree, mesh: Mesh, rules: Mapping[str, tuple[str, ...]],
+                   shape_tree=None):
+    """Map a pytree of logical-axis tuples to a pytree of NamedShardings.
+
+    `shape_tree` (ShapeDtypeStructs or arrays, same structure) enables
+    divisibility-aware resolution — always pass it for jit in_shardings.
+    """
+    if shape_tree is None:
+        return jax.tree.map(lambda logical: named_sharding(logical, mesh, rules),
+                            logical_tree, is_leaf=_is_axes_leaf)
+    shapes, treedef = jax.tree.flatten(shape_tree)
+    axes = treedef.flatten_up_to(logical_tree)
+    out = [named_sharding(a, mesh, rules, s.shape) for a, s in zip(axes, shapes)]
+    return treedef.unflatten(out)

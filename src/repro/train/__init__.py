@@ -1,0 +1,6 @@
+from repro.train.step import (  # noqa: F401
+    TrainStepBundle,
+    init_train_state,
+    make_train_step,
+    train_state_specs,
+)

@@ -1,0 +1,72 @@
+"""GPipe-style pipeline parallelism over a mesh axis via shard_map+ppermute.
+
+Not the default path for the assigned configs (the pod axis serves as extra
+DP; see DESIGN.md §3 Parallelism for the rationale) but implemented and
+tested so a >2-pod deployment can move layers onto a 'stage' axis when the
+per-pod model no longer fits.
+
+Schedule: classic GPipe fill-drain over M microbatches and S stages:
+T = M + S - 1 slots; stage s works on microbatch (t - s) at slot t;
+activations hop stage->stage+1 with ``ppermute`` each slot. Bubble fraction
+= (S-1)/T, reported by ``pipeline_efficiency``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_efficiency(n_micro: int, n_stages: int) -> float:
+    return n_micro / (n_micro + n_stages - 1)
+
+
+def make_pipeline_fn(block_fn: Callable, mesh: Mesh, *, stage_axis: str = "stage",
+                     n_micro: int):
+    """block_fn(params_stage, x) -> x, applied per stage.
+
+    Returns fn(stage_params, x_micro) where stage_params leaves have leading
+    dim S (sharded over stage_axis) and x_micro is (M, mb, ...) (replicated).
+    Output: (M, mb, ...) activations after all S stages.
+    """
+    S = mesh.shape[stage_axis]
+
+    def pipelined(params, xs):
+        # per-shard: params leaf (1, ...) local stage params; xs (M, mb, d)
+        params = jax.tree.map(lambda a: a[0], params)
+        sid = jax.lax.axis_index(stage_axis)
+        M = xs.shape[0]
+        T = M + S - 1
+        buf = jnp.zeros_like(xs[0])          # activation currently held
+        outs = jnp.zeros_like(xs)
+
+        def slot(t, carry):
+            buf, outs = carry
+            # stage 0 ingests microbatch t (if any); others use what arrived
+            take = jnp.clip(t, 0, M - 1)
+            buf = jnp.where(sid == 0, xs[take], buf)
+            y = block_fn(params, buf)
+            # last stage emits microbatch (t - S + 1)
+            out_idx = jnp.clip(t - S + 1, 0, M - 1)
+            emit = (sid == S - 1) & (t - S + 1 >= 0)
+            outs = jax.lax.cond(
+                emit,
+                lambda o: jax.lax.dynamic_update_index_in_dim(o, y, out_idx, 0),
+                lambda o: o, outs)
+            # shift activations forward one stage
+            perm = [(i, i + 1) for i in range(S - 1)]
+            buf = jax.lax.ppermute(y, stage_axis, perm)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, T, slot, (buf, outs))
+        # only the last stage holds real outputs; broadcast them
+        outs = jax.lax.psum(jnp.where(sid == S - 1, outs, 0.0), stage_axis)
+        return outs
+
+    return jax.jit(shard_map(
+        pipelined, mesh=mesh,
+        in_specs=(P(stage_axis), P()), out_specs=P(), check_rep=False))

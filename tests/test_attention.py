@@ -1,0 +1,83 @@
+"""Flash-chunked attention vs the O(S^2) oracle; decode vs full forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    decode_attention,
+    flash_attention,
+    reference_attention,
+)
+from repro.models.layers import Ctx
+
+
+def _qkv(key, B, S, H, KV, D, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, S, H, D), dtype)
+    k = jax.random.normal(k2, (B, S, KV, D), dtype)
+    v = jax.random.normal(k3, (B, S, KV, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("H,KV", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_reference(H, KV, causal):
+    B, S, D = 2, 64, 16
+    cfg = ModelConfig(attn_chunk_q=16, attn_chunk_kv=16)
+    ctx = Ctx(cfg)
+    q, k, v = _qkv(jax.random.key(0), B, S, H, KV, D)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out = flash_attention(q, k, v, pos, pos, ctx, causal=causal)
+    ref = reference_attention(q, k, v, pos, pos, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_prefix_lm_mask():
+    B, S, H, KV, D = 1, 32, 2, 2, 8
+    cfg = ModelConfig(attn_chunk_q=8, attn_chunk_kv=8)
+    ctx = Ctx(cfg)
+    q, k, v = _qkv(jax.random.key(1), B, S, H, KV, D)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out = flash_attention(q, k, v, pos, pos, ctx, causal=True, prefix_len=8)
+    ref = reference_attention(q, k, v, pos, pos, causal=True, prefix_len=8)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_causal_skip_variant_matches_dense():
+    B, S, H, KV, D = 2, 64, 4, 2, 16
+    ctx_d = Ctx(ModelConfig(attn_chunk_q=16, attn_chunk_kv=16, attn_impl="chunked"))
+    ctx_s = Ctx(ModelConfig(attn_chunk_q=16, attn_chunk_kv=16,
+                            attn_impl="chunked_causal_skip"))
+    q, k, v = _qkv(jax.random.key(2), B, S, H, KV, D)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    dense = flash_attention(q, k, v, pos, pos, ctx_d, causal=True)
+    skip = flash_attention(q, k, v, pos, pos, ctx_s, causal=True)
+    np.testing.assert_allclose(skip, dense, atol=2e-5, rtol=2e-5)
+
+
+def test_non_divisible_chunking():
+    """S=50 with chunk 16 -> divisor fallback must still be exact."""
+    B, S, H, KV, D = 1, 50, 2, 1, 8
+    ctx = Ctx(ModelConfig(attn_chunk_q=16, attn_chunk_kv=16))
+    q, k, v = _qkv(jax.random.key(3), B, S, H, KV, D)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out = flash_attention(q, k, v, pos, pos, ctx, causal=True)
+    ref = reference_attention(q, k, v, pos, pos, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_matches_full_attention():
+    """One-token decode over a cache == last row of full attention."""
+    B, S, H, KV, D = 2, 24, 4, 2, 8
+    ctx = Ctx(ModelConfig())
+    q, k, v = _qkv(jax.random.key(4), B, S, H, KV, D)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = reference_attention(q, k, v, pos, pos, causal=True)
+    # cache with padding beyond S
+    Smax = 32
+    kc = jnp.pad(k, ((0, 0), (0, Smax - S), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, Smax - S), (0, 0), (0, 0)))
+    out = decode_attention(q[:, -1:], kc, vc, jnp.full((B,), S - 1), ctx)
+    np.testing.assert_allclose(out[:, 0], full[:, -1], atol=2e-5, rtol=2e-5)

@@ -1,0 +1,82 @@
+"""Assigned architectures x shapes: exact dims from the assignment table."""
+import pytest
+
+from repro.configs import SHAPES, applicable_shapes, get_arch, list_archs
+
+# (name, family, L, d_model, H, KV, d_ff, vocab)
+TABLE = [
+    ("command-r-35b", "dense", 40, 8192, 64, 8, 22528, 256000),
+    ("qwen2-1.5b", "dense", 28, 1536, 12, 2, 8960, 151936),
+    ("qwen1.5-32b", "dense", 64, 5120, 40, 40, 27392, 152064),
+    ("qwen3-8b", "dense", 36, 4096, 32, 8, 12288, 151936),
+    ("grok-1-314b", "moe", 64, 6144, 48, 8, 32768, 131072),
+    ("qwen2-moe-a2.7b", "moe", 24, 2048, 16, 16, 5632, 151936),
+    ("paligemma-3b", "vlm", 18, 2048, 8, 1, 16384, 257216),
+    ("whisper-large-v3", "audio", 32, 1280, 20, 20, 5120, 51866),
+    ("zamba2-2.7b", "hybrid", 54, 2560, 32, 32, 10240, 32000),
+    ("rwkv6-3b", "ssm", 32, 2560, 40, 40, 8960, 65536),
+]
+
+
+def test_all_archs_registered():
+    assert sorted(list_archs()) == sorted(n for n, *_ in TABLE)
+
+
+@pytest.mark.parametrize("name,family,L,d,H,KV,dff,V", TABLE)
+def test_arch_dims(name, family, L, d, H, KV, dff, V):
+    cfg = get_arch(name)
+    assert cfg.family == family
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == H and cfg.n_kv_heads == KV
+    assert cfg.d_ff == dff and cfg.vocab_size == V
+
+
+def test_arch_specifics():
+    assert get_arch("qwen3-8b").qk_norm
+    assert get_arch("qwen2-1.5b").qkv_bias and get_arch("qwen1.5-32b").qkv_bias
+    assert get_arch("command-r-35b").parallel_block
+    g = get_arch("grok-1-314b")
+    assert g.n_experts == 8 and g.top_k == 2
+    q = get_arch("qwen2-moe-a2.7b")
+    assert q.n_experts == 60 and q.top_k == 4 and q.n_shared_experts == 4
+    assert q.moe_d_ff == 1408
+    z = get_arch("zamba2-2.7b")
+    assert z.ssm_state == 64 and z.attn_every == 6
+    w = get_arch("whisper-large-v3")
+    assert w.n_enc_layers == 32 and w.enc_seq == 1500
+    assert get_arch("paligemma-3b").n_patches == 256
+    assert get_arch("rwkv6-3b").rope_theta == 0.0  # attention-free
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768 and SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_applicability():
+    # sub-quadratic families only (assignment rule; skip documented in DESIGN.md)
+    for name in list_archs():
+        cfg = get_arch(name)
+        shapes = applicable_shapes(cfg)
+        if cfg.family in ("hybrid", "ssm"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+    # 40 assigned cells = 32 lowered + 8 documented long_500k skips
+    total = sum(len(applicable_shapes(get_arch(a))) for a in list_archs())
+    assert total == 32
+
+
+def test_param_counts_close_to_nameplate():
+    """Total params within tolerance of each arch's nameplate size."""
+    from repro.launch.roofline import count_params
+    expect = {"command-r-35b": 35e9, "qwen2-1.5b": 1.5e9, "qwen1.5-32b": 32e9,
+              "qwen3-8b": 8e9, "grok-1-314b": 314e9, "qwen2-moe-a2.7b": 14e9,
+              "paligemma-3b": 2.5e9, "whisper-large-v3": 1.5e9,
+              "zamba2-2.7b": 2.7e9, "rwkv6-3b": 3e9}
+    for name, nominal in expect.items():
+        total, active = count_params(get_arch(name))
+        assert 0.5 * nominal < total < 1.7 * nominal, (name, total)
+        assert active <= total

@@ -1,0 +1,141 @@
+"""Learner end-to-end behaviour: learning power, determinism (§3.11),
+serialization backwards compatibility, self-evaluation."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CartLearner,
+    GradientBoostedTreesLearner,
+    Model,
+    RandomForestLearner,
+    Task,
+)
+from repro.data.tabular import adult_like, train_test_split
+
+
+def _xor_data(n=600, seed=0):
+    rng = np.random.default_rng(seed)
+    a, b = rng.normal(size=n), rng.normal(size=n)
+    y = np.where((a > 0) ^ (b > 0), "pos", "neg")
+    noise = rng.normal(size=n)
+    return {"a": a.astype(object), "b": b.astype(object),
+            "noise": noise.astype(object), "y": y.astype(object)}
+
+
+@pytest.fixture(scope="module")
+def adult():
+    return train_test_split(adult_like(2000), 0.3, 1)
+
+
+def test_gbt_learns_xor():
+    train, test = train_test_split(_xor_data(), 0.3, 0)
+    m = GradientBoostedTreesLearner(label="y", num_trees=40).train(train)
+    assert m.evaluate(test)["accuracy"] > 0.9  # linear model can't beat 0.5
+
+
+def test_rf_learns_xor_and_oob_close_to_test():
+    train, test = train_test_split(_xor_data(), 0.3, 0)
+    m = RandomForestLearner(label="y", num_trees=30).train(train)
+    acc = m.evaluate(test)["accuracy"]
+    assert acc > 0.85
+    oob = m.self_evaluation
+    assert oob is not None and oob.source == "out-of-bag"
+    assert abs(oob["accuracy"] - acc) < 0.1
+
+
+def test_gbt_regression():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(-3, 3, 800)
+    y = np.sin(x) * 2 + rng.normal(scale=0.1, size=800)
+    data = {"x": x.astype(object), "y": y.astype(object)}
+    train, test = train_test_split(data, 0.3, 0)
+    m = GradientBoostedTreesLearner(label="y", task=Task.REGRESSION,
+                                    num_trees=60).train(train)
+    ev = m.evaluate(test)
+    assert ev["rmse"] < 0.35 and ev["r2"] > 0.9
+
+
+def test_gbt_multiclass():
+    rng = np.random.default_rng(2)
+    x1, x2 = rng.normal(size=900), rng.normal(size=900)
+    y = np.select([x1 + x2 > 0.8, x1 - x2 > 0.8], ["a", "b"], default="c")
+    data = {"x1": x1.astype(object), "x2": x2.astype(object),
+            "y": y.astype(object)}
+    train, test = train_test_split(data, 0.3, 0)
+    m = GradientBoostedTreesLearner(label="y", num_trees=30).train(train)
+    ev = m.evaluate(test)
+    assert ev["accuracy"] > 0.85
+    assert m.predict(test).shape[1] == 3
+    np.testing.assert_allclose(m.predict(test).sum(1), 1.0, atol=1e-5)
+
+
+def test_determinism_same_seed(adult):
+    train, test = adult
+    m1 = GradientBoostedTreesLearner(label="income", num_trees=10, seed=9).train(train)
+    m2 = GradientBoostedTreesLearner(label="income", num_trees=10, seed=9).train(train)
+    np.testing.assert_array_equal(m1.predict(test), m2.predict(test))
+    m3 = RandomForestLearner(label="income", num_trees=5, seed=9).train(train)
+    m4 = RandomForestLearner(label="income", num_trees=5, seed=9).train(train)
+    np.testing.assert_array_equal(m3.predict(test), m4.predict(test))
+
+
+def test_save_load_roundtrip(adult, tmp_path):
+    train, test = adult
+    m = GradientBoostedTreesLearner(label="income", num_trees=8).train(train)
+    m.save(str(tmp_path / "model"))
+    m2 = Model.load(str(tmp_path / "model"))
+    np.testing.assert_array_equal(m.predict(test), m2.predict(test))
+
+
+def test_early_stopping_truncates(adult):
+    train, test = adult
+    m = GradientBoostedTreesLearner(label="income", num_trees=150,
+                                    shrinkage=0.4).train(train)
+    # aggressive shrinkage overfits fast; early stopping must kick in
+    assert m.training_logs["num_trees"] < 150
+
+
+def test_best_first_global_growth(adult):
+    train, test = adult
+    m = GradientBoostedTreesLearner(
+        label="income", num_trees=15, growing_strategy="BEST_FIRST_GLOBAL",
+        max_num_nodes=32, max_depth=10).train(train)
+    assert m.evaluate(test)["accuracy"] > 0.75
+    c = m.forest.node_counts()
+    assert c["nodes_per_tree_mean"] <= 33
+
+
+def test_cart_prunes_and_predicts(adult):
+    train, test = adult
+    m = CartLearner(label="income").train(train)
+    assert m.evaluate(test)["accuracy"] > 0.7
+    assert m.forest.n_trees == 1
+
+
+def test_variable_importance_finds_signal():
+    train, _ = train_test_split(_xor_data(), 0.3, 0)
+    m = GradientBoostedTreesLearner(label="y", num_trees=20).train(train)
+    vi = m.variable_importances()["NUM_NODES"]
+    assert vi["a"] > vi["noise"] and vi["b"] > vi["noise"]
+
+
+def test_hessian_gain_variant(adult):
+    train, test = adult
+    m = GradientBoostedTreesLearner(label="income", num_trees=20,
+                                    use_hessian_gain=True).train(train)
+    assert m.evaluate(test)["accuracy"] > 0.75
+
+
+def test_subsampling(adult):
+    train, test = adult
+    m = GradientBoostedTreesLearner(label="income", num_trees=20,
+                                    subsample=0.7).train(train)
+    assert m.evaluate(test)["accuracy"] > 0.75
+
+
+def test_external_validation_set(adult):
+    train, test = adult
+    m = GradientBoostedTreesLearner(label="income", num_trees=15).train(
+        train, valid=test)
+    assert m.self_evaluation.source == "validation"
+    assert m.self_evaluation.n_examples == len(test["income"])

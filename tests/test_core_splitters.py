@@ -1,0 +1,137 @@
+"""Splitter correctness: histogram splitter vs the exact in-sorting oracle
+(paper §2.3: simple module == ground truth), categorical CART vs brute force,
+property-based invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binning import BinnedFeatures, bin_features
+from repro.core.dataspec import dataset_from_raw
+from repro.core.splitters import (
+    SplitterParams,
+    best_splits,
+    build_histogram,
+    exact_best_split_numerical,
+)
+
+
+def _gh_stats(rng, n):
+    g = rng.normal(size=n)
+    h = np.abs(rng.normal(size=n)) + 0.1
+    return np.stack([g, h, np.ones(n)], 1)
+
+
+def test_histogram_splitter_matches_exact_oracle():
+    """With unique-value bin boundaries the histogram gain == exact gain."""
+    rng = np.random.default_rng(0)
+    n = 200
+    x = rng.choice(np.linspace(-2, 2, 37), size=n)  # few unique values
+    stats = _gh_stats(rng, n)
+    params = SplitterParams(stat_kind="gh", min_examples=2, min_gain=-np.inf)
+
+    ds = dataset_from_raw({"x": x.astype(object), "y": np.ones(n, object)})
+    binned = bin_features(ds, ["x"])
+    hist = build_histogram(binned.codes, stats, np.zeros(n, np.int32), 1)
+    split = best_splits(hist, binned, params, np.random.default_rng(1))[0]
+
+    gain_exact, thr_exact = exact_best_split_numerical(x, stats, params)
+    assert split.feature == 0
+    np.testing.assert_allclose(split.gain, gain_exact, rtol=1e-4)
+    # both thresholds must induce the same partition
+    np.testing.assert_array_equal(x >= split.threshold + 1e-12,
+                                  x > thr_exact)
+
+
+def test_categorical_cart_binary_is_optimal():
+    """Fisher-ordered prefix scan == brute force over all subsets (binary)."""
+    rng = np.random.default_rng(2)
+    n, V = 300, 6
+    codes = rng.integers(0, V, n).astype(np.uint8)
+    stats = _gh_stats(rng, n)
+    params = SplitterParams(stat_kind="gh", min_examples=1, min_gain=-np.inf,
+                            categorical_algorithm="CART")
+    binned = BinnedFeatures(codes=codes[:, None], n_bins=np.array([V]),
+                            is_cat=np.array([True]), boundaries=[None],
+                            names=["c"])
+    hist = build_histogram(binned.codes, stats, np.zeros(n, np.int32), 1, V)
+    split = best_splits(hist, binned, params, np.random.default_rng(0))[0]
+
+    # brute force all 2^V subsets
+    def gain_of(mask):
+        right = np.isin(codes, mask)
+        if right.all() or (~right).any() == 0:
+            return -np.inf
+        G, H = stats[:, 0], stats[:, 1]
+        sc = lambda sel: 0.5 * G[sel].sum() ** 2 / (H[sel].sum() + 1e-12)
+        tot = 0.5 * G.sum() ** 2 / (H.sum() + 1e-12)
+        if right.sum() == 0 or (~right).sum() == 0:
+            return -np.inf
+        return sc(right) + sc(~right) - tot
+
+    best_brute = max(gain_of(np.array(s)) for s in _subsets(V))
+    np.testing.assert_allclose(split.gain, best_brute, rtol=1e-4)
+
+
+def _subsets(V):
+    for m in range(1, 2 ** V - 1):
+        yield [v for v in range(V) if m >> v & 1]
+
+
+def test_min_examples_respected():
+    rng = np.random.default_rng(3)
+    n = 40
+    x = np.concatenate([np.zeros(2), np.ones(n - 2)])  # tiny left group
+    stats = _gh_stats(rng, n)
+    stats[:2, 0] = 100.0  # huge gain if the tiny group could split off
+    params = SplitterParams(stat_kind="gh", min_examples=5)
+    ds = dataset_from_raw({"x": x.astype(object), "y": np.ones(n, object)})
+    binned = bin_features(ds, ["x"])
+    hist = build_histogram(binned.codes, stats, np.zeros(n, np.int32), 1)
+    split = best_splits(hist, binned, params, np.random.default_rng(0))[0]
+    assert not split.valid  # the only cut violates min_examples
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 120), f=st.integers(1, 4), nodes=st.integers(1, 5),
+       bins=st.sampled_from([4, 16, 64]), seed=st.integers(0, 10_000))
+def test_histogram_partition_property(n, f, nodes, bins, seed):
+    """Histogram totals == direct per-node sums; bins partition examples."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, bins, (n, f)).astype(np.uint8)
+    stats = _gh_stats(rng, n)
+    node_of = rng.integers(-1, nodes, n).astype(np.int32)
+    hist = build_histogram(codes, stats, node_of, nodes, bins)
+    assert hist.shape == (nodes, f, bins, 3)
+    for node in range(nodes):
+        sel = node_of == node
+        np.testing.assert_allclose(hist[node, 0].sum(0), stats[sel].sum(0),
+                                   atol=1e-4)
+        # identical totals across features (each feature sees every example)
+        np.testing.assert_allclose(hist[node].sum(1),
+                                   np.broadcast_to(stats[sel].sum(0), (f, 3)),
+                                   atol=1e-4)
+
+
+def test_oblique_splits_fold_normalization():
+    """Raw-space evaluation of an oblique split == training-time partition."""
+    from repro.core.splitters import oblique_splits, apply_split, Split
+    rng = np.random.default_rng(5)
+    n, f = 300, 4
+    X = rng.normal(size=(n, f)) * np.array([1, 10, 0.1, 3]) + 5
+    w_true = np.array([1.0, -0.5, 2.0, 0.0])
+    y = (X @ w_true > np.median(X @ w_true)).astype(float)
+    g = (0.5 - y)
+    stats = np.stack([g, np.ones(n), np.ones(n)], 1)
+    params = SplitterParams(stat_kind="gh", min_examples=2, oblique=True,
+                            oblique_num_projections_exponent=1.5)
+    splits = oblique_splits(X, X.min(0), X.max(0), stats,
+                            np.zeros(n, np.int32), 1, params,
+                            np.random.default_rng(0))
+    s = splits[0]
+    assert s.obl_features is not None and s.gain > 0
+    proj = X[:, s.obl_features] @ s.obl_weights
+    go = proj >= s.threshold
+    # a decent oblique split separates classes far better than chance
+    acc = max((y[go] == 1).mean() if go.any() else 0,
+              (y[~go] == 1).mean() if (~go).any() else 0)
+    assert go.any() and (~go).any()

@@ -1,0 +1,51 @@
+"""Validate the multi-pod dry-run artifacts (results/dryrun/*.json): every
+(arch x applicable shape x mesh) cell must exist and carry sane roofline
+terms. Skipped when the dry-run has not been executed yet."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import applicable_shapes, get_arch, list_archs
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def _cells():
+    for arch in list_archs():
+        for shape in applicable_shapes(get_arch(arch)):
+            for mesh in ("single", "multi"):
+                yield arch, shape, mesh
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(RESULTS, "*.json")),
+                    reason="dry-run artifacts not generated")
+def test_all_cells_present_and_sane():
+    missing, bad = [], []
+    for arch, shape, mesh in _cells():
+        p = os.path.join(RESULTS, f"{arch}__{shape}__{mesh}.json")
+        if not os.path.exists(p):
+            missing.append((arch, shape, mesh))
+            continue
+        d = json.load(open(p))
+        t = d["terms"]
+        chips = 512 if mesh == "multi" else 256
+        if d["chips"] != chips:
+            bad.append((arch, shape, mesh, "chips"))
+        if not (t["compute_s"] >= 0 and t["memory_s"] > 0):
+            bad.append((arch, shape, mesh, "terms"))
+        if t["dominant"] not in ("compute", "memory", "collective"):
+            bad.append((arch, shape, mesh, "dominant"))
+    assert not missing, f"missing dry-run cells: {missing}"
+    assert not bad, f"bad dry-run cells: {bad}"
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(RESULTS, "*unrolled.json")),
+                    reason="roofline artifacts not generated")
+def test_roofline_cells_have_collectives_and_flops():
+    for p in glob.glob(os.path.join(RESULTS, "*unrolled.json")):
+        d = json.load(open(p))
+        assert d["terms"]["flops_per_device"] > 0, p
+        assert d["collectives"]["total_bytes"] > 0, p
+        assert 0 < d["terms"]["useful_ratio"] < 10, (p, d["terms"]["useful_ratio"])

@@ -1,0 +1,113 @@
+"""Meta-learners (§3.2): tuner, ensembler, calibrator, feature selector —
+including composition (Fig. 3)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Calibrator,
+    Ensembler,
+    FeatureSelector,
+    GradientBoostedTreesLearner,
+    HyperParameterTuner,
+    RandomForestLearner,
+    cross_validate,
+)
+from repro.core.metalearners import kfold_indices
+from repro.data.tabular import adult_like, train_test_split
+
+
+@pytest.fixture(scope="module")
+def adult():
+    return train_test_split(adult_like(1200), 0.3, 1)
+
+
+def _gbt_factory(**kw):
+    kw.setdefault("num_trees", 12)
+    return GradientBoostedTreesLearner(**kw)
+
+
+def test_tuner_finds_depth_on_xor():
+    """On XOR, depth-1 boosting cannot learn — the tuner must discover it."""
+    rng = np.random.default_rng(0)
+    a, b = rng.normal(size=700), rng.normal(size=700)
+    y = np.where((a > 0) ^ (b > 0), "pos", "neg")
+    data = {"a": a.astype(object), "b": b.astype(object), "y": y.astype(object)}
+    train, test = train_test_split(data, 0.3, 0)
+    bad = GradientBoostedTreesLearner(label="y", num_trees=12,
+                                      max_depth=1).train(train)
+    tuner = HyperParameterTuner(
+        _gbt_factory, {"max_depth": [1, 4], "shrinkage": [0.1, 0.3]},
+        label="y", n_trials=4, metric="accuracy", seed=3)
+    tuned = tuner.train(train)
+    assert tuned.tuning_logs["best"]["max_depth"] > 1
+    assert tuned.evaluate(test)["accuracy"] > bad.evaluate(test)["accuracy"] + 0.2
+
+
+def test_ensembler_averages(adult):
+    train, test = adult
+    ens = Ensembler([
+        GradientBoostedTreesLearner(label="income", num_trees=8, seed=1),
+        RandomForestLearner(label="income", num_trees=6, seed=2),
+    ], label="income")
+    model = ens.train(train)
+    p = model.predict(test)
+    a = model.models[0].predict(test)
+    b = model.models[1].predict(test)
+    np.testing.assert_allclose(p, (a + b) / 2, atol=1e-6)
+
+
+def test_calibrator_improves_logloss_of_miscalibrated_model(adult):
+    train, test = adult
+    # winner-take-all RF with few trees gives hard 0/1-ish probabilities
+    # -> badly miscalibrated logloss that Platt scaling must repair
+    base = lambda **kw: RandomForestLearner(num_trees=5, winner_take_all=True,
+                                            **kw)
+    raw = base(label="income").train(train)
+    cal = Calibrator(base(label="income"), label="income", seed=5).train(train)
+    ll_raw = raw.evaluate(test)["logloss"]
+    ll_cal = cal.evaluate(test)["logloss"]
+    assert ll_cal < ll_raw
+
+
+def test_feature_selector_drops_noise(adult):
+    rng = np.random.default_rng(0)
+    train, test = adult
+    train = dict(train, pure_noise=rng.normal(size=len(train["income"])).astype(object))
+    fs = FeatureSelector(lambda **kw: RandomForestLearner(num_trees=8, **kw),
+                         label="income")
+    model = fs.train(train)
+    assert "pure_noise" in model.removed_features or \
+        "pure_noise" not in model.selected_features
+
+
+def test_metalearner_composition(adult):
+    """Fig. 3: calibrator(ensembler(tuner(GBT), RF))."""
+    train, test = adult
+    tuner = HyperParameterTuner(_gbt_factory, {"max_depth": [3, 6]},
+                                label="income", n_trials=2, seed=1)
+    ens = Ensembler([tuner, RandomForestLearner(label="income", num_trees=6)],
+                    label="income")
+    cal = Calibrator(ens, label="income")
+    model = cal.train(train)
+    ev = model.evaluate(test)
+    assert ev["accuracy"] > 0.7
+
+
+def test_cross_validation_folds_are_learner_independent():
+    f1 = kfold_indices(100, 5, seed=7)
+    f2 = kfold_indices(100, 5, seed=7)
+    for (a, b), (c, d) in zip(f1, f2):
+        np.testing.assert_array_equal(a, c)
+        np.testing.assert_array_equal(b, d)
+    # folds partition the data
+    all_va = np.sort(np.concatenate([va for _, va in f1]))
+    np.testing.assert_array_equal(all_va, np.arange(100))
+
+
+def test_cross_validate_runs(adult):
+    train, _ = adult
+    evals = cross_validate(
+        lambda: GradientBoostedTreesLearner(label="income", num_trees=5),
+        train, k=3)
+    assert len(evals) == 3
+    assert all(0.5 < e["accuracy"] <= 1.0 for e in evals)

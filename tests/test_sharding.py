@@ -1,0 +1,92 @@
+"""Logical-axis sharding resolution: divisibility fallback, axis reuse,
+mesh-agnostic rules."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import (
+    LONG_DECODE_RULES,
+    TRAIN_RULES,
+    resolve_spec,
+    rules_for,
+    tree_shardings,
+)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_resolve_drops_non_dividing_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # shape-aware: kv_heads=2 can't shard over model-sized 1? use abstract test
+    # via a fake mesh with axis sizes from mesh.shape — use the rule table.
+    spec = resolve_spec(("embed", "kv_heads", None), mesh, TRAIN_RULES,
+                        shape=(64, 2, 16))
+    assert isinstance(spec, P)
+
+
+def test_divisibility_logic_against_production_sizes():
+    """Check the pure resolution logic against production axis sizes without
+    building a 256-device mesh (device count is locked to 1 in tests)."""
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    m = FakeMesh()
+    # kv=8 doesn't divide 16 -> dropped; embed 8192 divides -> kept
+    spec = resolve_spec(("embed", "kv_heads", "qkv"), m, TRAIN_RULES,
+                        shape=(8192, 8, 128))
+    assert spec == P("data", None, None)
+    # heads=64 divides 16 -> kept
+    spec = resolve_spec(("embed", "heads", "qkv"), m, TRAIN_RULES,
+                        shape=(8192, 64, 128))
+    assert spec == P("data", "model", None)
+    # vocab 51866 (whisper) not divisible by 16 -> dropped
+    spec = resolve_spec(("vocab", "embed"), m, TRAIN_RULES, shape=(51866, 1280))
+    assert spec == P(None, "data")
+
+
+def test_axis_used_once_per_spec():
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    spec = resolve_spec(("batch", "seq", "embed"), FakeMesh(), TRAIN_RULES,
+                        shape=(256, 4096, 1024))
+    # batch takes pod+data; embed would also want data but it's used
+    assert spec[0] == ("pod", "data")
+    assert spec[2] is None
+
+
+def test_long_decode_rules_shard_kv_len():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    spec = resolve_spec(("layers", "batch", "kv_len", "kv_heads", "qkv"),
+                        FakeMesh(), LONG_DECODE_RULES,
+                        shape=(54, 1, 524288, 32, 80))
+    assert spec[2] == "data"   # flash-decoding style length sharding
+    assert spec[1] is None     # batch=1 unshardable
+
+
+def test_tree_shardings_with_shape_tree(mesh):
+    specs = {"w": jax.ShapeDtypeStruct((8, 4), np.float32),
+             "step": jax.ShapeDtypeStruct((), np.int32)}
+    axes = {"w": ("embed", "mlp"), "step": ()}
+    sh = tree_shardings(axes, mesh, TRAIN_RULES, specs)
+    # size-1 axes divide everything -> named (but trivially replicated)
+    assert sh["w"].spec == P("data", "model")
+    assert sh["step"].spec == P()
+
+
+def test_rules_for_modes():
+    assert rules_for("train")["batch"] == ("pod", "data")
+    assert rules_for("serve", long_context=True)["kv_len"] == ("pod", "data")
+    # promoted default from §Perf hillclimb #2: decode caches shard their
+    # length over 'model' (flash-decoding)
+    assert rules_for("serve")["kv_len"] == ("model",)
+    assert rules_for("train")["kv_len"] == ()

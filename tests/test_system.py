@@ -1,0 +1,75 @@
+"""End-to-end system behaviour: the paper's §4 usage flow (dataspec -> train
+-> evaluate -> predict -> benchmark) through the public API, CSV round-trip
+included, plus the cross-API training-config path (§3.10)."""
+import numpy as np
+
+from repro.core import (
+    GradientBoostedTreesLearner,
+    Model,
+    Task,
+    get_learner,
+    list_learners,
+    make_learner,
+)
+from repro.core.dataspec import infer_dataspec
+from repro.core.engines import benchmark_inference
+from repro.data.io import read_dataset, write_dataset
+from repro.data.tabular import adult_like, train_test_split
+
+
+def test_cli_like_flow(tmp_path):
+    """Mirrors the paper's §4.1 CLI sequence end to end."""
+    train, test = train_test_split(adult_like(1500), 0.3, 3)
+    write_dataset(train, f"csv:{tmp_path}/train.csv")
+    write_dataset(test, f"csv:{tmp_path}/test.csv")
+
+    # infer_dataspec + show_dataspec
+    train_csv = read_dataset(f"csv:{tmp_path}/train.csv")
+    spec = infer_dataspec(train_csv)
+    rep = spec.report()
+    assert "income" in rep and "NUMERICAL" in rep
+
+    # train
+    learner = GradientBoostedTreesLearner(label="income", num_trees=20)
+    model = learner.train(train_csv)
+
+    # show_model
+    summary = model.summary()
+    assert "GRADIENT" in summary.upper() and "Variable Importance" in summary
+
+    # evaluate (report with CI, App. B.3 style)
+    test_csv = read_dataset(f"csv:{tmp_path}/test.csv")
+    ev = model.evaluate(test_csv)
+    assert ev["accuracy"] > 0.75
+    assert "CI95" in ev.report()
+
+    # predict -> csv
+    pred = model.predict(test_csv)
+    write_dataset({"p_le50k": pred[:, 0], "p_gt50k": pred[:, 1]},
+                  f"csv:{tmp_path}/predictions.csv")
+    back = read_dataset(f"csv:{tmp_path}/predictions.csv")
+    assert len(back["p_gt50k"]) == len(test_csv["income"])
+
+    # benchmark_inference (App. B.4)
+    rep = benchmark_inference(model, test_csv, repetitions=1)
+    assert "us/example" in rep
+
+    # save / load roundtrip through the Model registry
+    model.save(str(tmp_path / "model"))
+    m2 = Model.load(str(tmp_path / "model"))
+    np.testing.assert_array_equal(model.predict(test_csv), m2.predict(test_csv))
+
+
+def test_learner_registry_and_cross_api_config():
+    assert {"GRADIENT_BOOSTED_TREES", "RANDOM_FOREST", "CART",
+            "LINEAR"} <= set(list_learners())
+    cfg = {"learner": "GRADIENT_BOOSTED_TREES", "label": "income",
+           "task": "CLASSIFICATION", "seed": 7, "hparams": {"num_trees": 5}}
+    learner = make_learner(cfg)
+    assert learner.hparams.num_trees == 5
+    # train_config roundtrip (cross-API compatibility, §3.10)
+    cfg2 = learner.train_config()
+    learner2 = make_learner(cfg2)
+    train, test = train_test_split(adult_like(500), 0.3, 1)
+    m1, m2 = learner.train(train), learner2.train(train)
+    np.testing.assert_array_equal(m1.predict(test), m2.predict(test))
