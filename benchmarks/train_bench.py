@@ -1,0 +1,130 @@
+"""Training-throughput benchmark: batched-frontier engine vs the
+seed-equivalent oracle grower, per histogram backend. Writes BENCH_train.json
+(the perf-trajectory baseline; paper Tab. 2 analogue for *training*).
+
+"before" = growth_engine="oracle": the seed grower — per-node partition
+loops, full-N histogram rebuilds, example-major (simple) histogram backend.
+"after"  = growth_engine="batched": vectorized frontier routing, flattened
+bincount leaf stats, parent-minus-sibling histogram subtraction, numpy (or
+pallas, on TPU) histogram backend.
+
+Every timed pair is also checked for bit-identical forests (the §2.3
+contract: the optimized path must reproduce the simple module exactly).
+
+Usage: python benchmarks/train_bench.py [--rows N] [--trees T] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import platform
+import time
+
+import numpy as np
+
+from repro.core import GradientBoostedTreesLearner, RandomForestLearner
+from repro.data.tabular import SUITE, make_dataset, train_test_split
+
+FOREST_KEYS = ["feature", "threshold", "split_bin", "cat_mask", "left_child",
+               "leaf_value", "n_nodes"]
+
+
+def _forests_identical(a, b) -> bool:
+    return all(np.array_equal(getattr(a, k), getattr(b, k))
+               for k in FOREST_KEYS)
+
+
+def _time_pair(fns: list, reps: int):
+    """Best-of-reps for each candidate, reps interleaved across candidates so
+    background load perturbs every candidate equally."""
+    best = [np.inf] * len(fns)
+    models = [None] * len(fns)
+    for _ in range(reps):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            models[i] = fn()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best, models
+
+
+def _configs(num_trees: int, scaled_rows: int):
+    """speed.py-style learner configs on the synthetic suite + a scaled
+    dataset where the asymptotics show (the suite datasets are paper-small)."""
+    small = SUITE[2]                                     # synth_adult, 2k rows
+    scaled = dataclasses.replace(small, n=scaled_rows)
+    gbt = lambda **kw: GradientBoostedTreesLearner(
+        label="label", num_trees=num_trees, **kw)
+    gbt_bf = lambda **kw: GradientBoostedTreesLearner(
+        label="label", num_trees=num_trees,
+        growing_strategy="BEST_FIRST_GLOBAL", **kw)
+    rf = lambda **kw: RandomForestLearner(
+        label="label", num_trees=max(10, num_trees // 3), max_depth=12,
+        compute_oob=False, **kw)
+    return [
+        ("gbt_default_small", gbt, small, 4),
+        ("gbt_default_scaled", gbt, scaled, 3),
+        ("gbt_best_first_scaled", gbt_bf, scaled, 3),
+        ("rf_scaled", rf, scaled, 2),
+    ]
+
+
+def run(num_trees: int = 30, scaled_rows: int = 100_000,
+        verbose: bool = True) -> dict:
+    import jax
+    backends = ["numpy"]
+    if jax.default_backend() == "tpu":
+        backends.append("pallas")
+    out: dict = {
+        "benchmark": "train_bench",
+        "host": {"platform": platform.platform(), "numpy": np.__version__,
+                 "jax_backend": jax.default_backend()},
+        "num_trees": num_trees,
+        "scaled_rows": scaled_rows,
+        "configs": {},
+    }
+    for name, make, spec, reps in _configs(num_trees, scaled_rows):
+        train, _ = train_test_split(make_dataset(spec), 0.3, spec.seed)
+        fns = [lambda: make(growth_engine="oracle").train(train)]
+        for backend in backends:
+            fns.append(lambda backend=backend: make(
+                growth_engine="batched",
+                histogram_backend=backend).train(train))
+        times, models = _time_pair(fns, reps)
+        t_before, m_before = times[0], models[0]
+        row = {"dataset": spec.name, "n_rows": spec.n,
+               "train_s_before": round(t_before, 4), "after": {}}
+        for k, backend in enumerate(backends, start=1):
+            row["after"][backend] = {
+                "train_s": round(times[k], 4),
+                "speedup": round(t_before / times[k], 3),
+                "bit_identical": _forests_identical(m_before.forest,
+                                                    models[k].forest),
+            }
+        out["configs"][name] = row
+        if verbose:
+            a = row["after"]["numpy"]
+            print(f"  {name:24s} n={spec.n:<7d} before={t_before:7.2f}s "
+                  f"after={a['train_s']:7.2f}s speedup={a['speedup']:5.2f}x "
+                  f"bit_identical={a['bit_identical']}", flush=True)
+    out["headline_speedup"] = out["configs"]["gbt_default_scaled"][
+        "after"]["numpy"]["speedup"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=100_000,
+                    help="scaled dataset size")
+    ap.add_argument("--trees", type=int, default=30)
+    ap.add_argument("--out", default="BENCH_train.json")
+    args = ap.parse_args()
+    res = run(num_trees=args.trees, scaled_rows=args.rows)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"headline (gbt_default_scaled, numpy backend): "
+          f"{res['headline_speedup']:.2f}x -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,7 +45,9 @@ class CartLearner(Learner):
         sp = SplitterParams(stat_kind=stat_kind, min_examples=hp.min_examples,
                             categorical_algorithm=hp.categorical_algorithm)
         gp = GrowthParams(max_depth=hp.max_depth, max_nodes=hp.max_num_nodes,
-                          growing_strategy="LOCAL", splitter=sp)
+                          growing_strategy="LOCAL", splitter=sp,
+                          engine=hp.growth_engine,
+                          histogram_backend=hp.histogram_backend)
         forest = empty_forest(1, hp.max_num_nodes, out_dim,
                               feature_names=td.features)
         forest.out_dim = out_dim

@@ -96,6 +96,7 @@ class DataSpec:
 # ----------------------------------------------------------------- inference
 
 _MISSING_TOKENS = {"", "na", "n/a", "nan", "none", "null", "?"}
+_MISSING_TOKEN_ARR = np.array(sorted(_MISSING_TOKENS))
 
 
 def _is_missing(v) -> bool:
@@ -111,6 +112,31 @@ def _try_float(v) -> float | None:
         return float(v)
     except (TypeError, ValueError):
         return None
+
+
+def _missing_mask(vals: np.ndarray) -> np.ndarray:
+    """Vectorized ``_is_missing`` over a raw object column.
+
+    Numeric path: one bulk float conversion (numpy maps None -> NaN) and an
+    isnan; NaN-parsing strings that are NOT missing tokens (e.g. "-nan") are
+    re-checked cell-by-cell so the result matches ``_is_missing`` exactly.
+    String path (bulk conversion fails): match the stripped, lowercased
+    string forms against the missing tokens — str(None) is "none" and
+    str(nan) is "nan", both tokens, so non-string missing cells still hit.
+    """
+    try:
+        miss = np.isnan(vals.astype(np.float64))
+    except (TypeError, ValueError):
+        s = np.char.lower(np.char.strip(vals.astype(str)))
+        return np.isin(s, _MISSING_TOKEN_ARR)
+    if miss.any():
+        for i in np.where(miss)[0]:
+            v = vals[i]
+            if v is None or isinstance(v, float):
+                continue  # genuinely missing; skip the per-cell re-check
+            if not _is_missing(v):
+                miss[i] = False
+    return miss
 
 
 def infer_dataspec(data: Mapping[str, Any], *,
@@ -134,7 +160,7 @@ def infer_dataspec(data: Mapping[str, Any], *,
             raise YdfError(
                 f"Column {name!r} has {len(vals)} values but previous columns "
                 f"have {n_rows}. All columns must have the same length.")
-        missing = np.array([_is_missing(v) for v in vals])
+        missing = _missing_mask(vals)
         present = vals[~missing]
         override = semantics.get(name)
         if override is not None:
@@ -144,15 +170,15 @@ def infer_dataspec(data: Mapping[str, Any], *,
         col = Column(name=name, semantic=sem, n_missing=int(missing.sum()),
                      manually_defined=override is not None)
         if sem == Semantic.NUMERICAL:
-            nums = np.array([_try_float(v) for v in present], dtype=object)
-            bad = [v for v, f in zip(present, nums) if f is None]
-            if bad:
+            try:
+                fs = present.astype(np.float64)
+            except (TypeError, ValueError):
+                bad = [v for v in present if _try_float(v) is None]
                 raise YdfError(
                     f"Column {name!r} is NUMERICAL but contains non-numeric "
                     f"value(s) e.g. {bad[:3]}. Solutions: (1) declare the column "
                     f"CATEGORICAL via semantics={{{name!r}: 'CATEGORICAL'}}, or "
                     "(2) clean the values.")
-            fs = nums.astype(np.float64)
             if fs.size:
                 col.mean, col.std = float(fs.mean()), float(fs.std())
                 col.min, col.max = float(fs.min()), float(fs.max())
@@ -178,13 +204,13 @@ def _infer_semantic(present: np.ndarray) -> Semantic:
         return Semantic.NUMERICAL
     if all(isinstance(v, (bool, np.bool_)) for v in present[:100]):
         return Semantic.BOOLEAN
-    floats = [_try_float(v) for v in present]
-    if all(f is not None for f in floats):
-        vals = set(float(f) for f in floats[:1000])
-        if vals <= {0.0, 1.0}:
-            return Semantic.BOOLEAN
-        return Semantic.NUMERICAL
-    return Semantic.CATEGORICAL
+    try:
+        floats = present.astype(np.float64)  # all-parseable or ValueError
+    except (TypeError, ValueError):
+        return Semantic.CATEGORICAL
+    if np.isin(floats[:1000], (0.0, 1.0)).all():
+        return Semantic.BOOLEAN
+    return Semantic.NUMERICAL
 
 
 # ----------------------------------------------------------------- encoding
@@ -223,24 +249,29 @@ def encode_dataset(data: Mapping[str, Any], spec: DataSpec) -> VerticalDataset:
         vals = np.asarray(data[name], dtype=object).ravel()
         n_rows = len(vals)
         if col.semantic == Semantic.NUMERICAL:
-            out = np.full(len(vals), np.nan, np.float32)
-            for i, v in enumerate(vals):
-                if not _is_missing(v):
-                    f = _try_float(v)
-                    out[i] = np.nan if f is None else f
+            try:
+                out = vals.astype(np.float64).astype(np.float32)
+            except (TypeError, ValueError):
+                out = np.full(len(vals), np.nan, np.float32)
+                for i, v in enumerate(vals):
+                    if not _is_missing(v):
+                        f = _try_float(v)
+                        out[i] = np.nan if f is None else f
             numerical[name] = out
         elif col.semantic == Semantic.BOOLEAN:
-            out = np.full(len(vals), -1, np.int32)
-            for i, v in enumerate(vals):
-                if not _is_missing(v):
-                    out[i] = 1 if str(v).strip().lower() in ("1", "1.0", "true") else 0
+            miss = _missing_mask(vals)
+            s = np.char.lower(np.char.strip(vals.astype(str)))
+            out = np.isin(s, ("1", "1.0", "true")).astype(np.int32)
+            out[miss] = -1
             categorical[name] = out
         else:
             lookup = {v: i for i, v in enumerate(col.vocab)}
-            out = np.full(len(vals), -1, np.int32)
-            for i, v in enumerate(vals):
-                if not _is_missing(v):
-                    out[i] = lookup.get(str(v), 0)  # 0 = OOD
+            miss = _missing_mask(vals)
+            uq, inv = np.unique(vals.astype(str), return_inverse=True)
+            code_of = np.fromiter((lookup.get(u, 0) for u in uq),
+                                  np.int32, len(uq))  # 0 = OOD
+            out = code_of[inv.reshape(len(vals))]
+            out[miss] = -1
             categorical[name] = out
     return VerticalDataset(spec=spec, numerical=numerical,
                            categorical=categorical, n_rows=n_rows)

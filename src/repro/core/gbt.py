@@ -81,7 +81,9 @@ class GradientBoostedTreesLearner(Learner):
             oblique_num_projections_exponent=hp.sparse_oblique_num_projections_exponent,
         )
         gp = GrowthParams(max_depth=hp.max_depth, max_nodes=max_nodes,
-                          growing_strategy=hp.growing_strategy, splitter=sp)
+                          growing_strategy=hp.growing_strategy, splitter=sp,
+                          engine=hp.growth_engine,
+                          histogram_backend=hp.histogram_backend)
         shrink, l2 = hp.shrinkage, hp.l2_regularization
 
         def leaf_fn(s):

@@ -9,6 +9,20 @@ Two strategies (paper §3.11 templates):
                          child histograms use the parent-minus-sibling
                          subtraction trick.
 
+Two engines (DESIGN.md §4):
+  * "batched" — the fast path. Level-wise: one vectorized ``apply_split`` pass
+    routes every frontier example and one flattened bincount aggregates all
+    child leaf stats. Best-first: per-node example index lists ride the heap,
+    only the smaller child's histogram is built and the sibling is derived as
+    ``parent - child``, making node evaluation O(smaller child) instead of
+    O(N). Histograms go through a pluggable backend (hist_backend.py:
+    numpy bincount or the one-hot-MXU Pallas kernel), selected by
+    ``GrowthParams.histogram_backend``.
+  * "oracle"  — the seed-equivalent simple module (paper §2.3: the simple
+    implementation is the ground truth): per-node partition loops and full-N
+    histogram rebuilds, host numpy only. With the numpy backend the batched
+    engine produces bit-identical trees at equal seeds (tested).
+
 The grower owns node allocation in the Forest SoA and the per-example
 ``node_of`` routing; leaf values come from a caller-provided ``leaf_fn`` over
 aggregated node stats.
@@ -16,12 +30,14 @@ aggregated node stats.
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
+from repro.core.api import YdfError
 from repro.core.binning import BinnedFeatures
+from repro.core.hist_backend import HistogramBackend, resolve_backend
 from repro.core.splitters import (
     Split,
     SplitterParams,
@@ -38,7 +54,9 @@ class GrowthParams:
     max_depth: int = 6
     max_nodes: int = 2048           # total node budget per tree
     growing_strategy: str = "LOCAL"  # LOCAL | BEST_FIRST_GLOBAL
-    splitter: SplitterParams = None  # type: ignore
+    splitter: SplitterParams = field(default_factory=SplitterParams)
+    engine: str = "batched"          # batched | oracle (seed-equivalent)
+    histogram_backend: str = "auto"  # auto | numpy | pallas (batched engine)
 
 
 def _set_split(forest: Forest, t: int, node: int, split: Split,
@@ -80,25 +98,32 @@ def grow_tree(forest: Forest, t: int, binned: BinnedFeatures, X_raw: np.ndarray,
     mask; `stats` must already include bagging weights. Returns the final
     ``node_of`` array ((N,) int32, -1 for inactive examples) so boosting can
     read leaf assignments without re-traversal."""
-    sp = params.splitter
-    N = binned.codes.shape[0]
     node_of = np.where(active, 0, -1).astype(np.int32)
     root_stats = stats[active].sum(0)
     forest.leaf_value[t, 0] = leaf_fn(root_stats)
     forest.n_nodes[t] = 1
-    if params.growing_strategy == "BEST_FIRST_GLOBAL":
-        depth = _grow_best_first(forest, t, binned, X_raw, stats, node_of,
-                                 params, rng, leaf_fn, num_lo, num_hi)
+    best_first = params.growing_strategy == "BEST_FIRST_GLOBAL"
+    if params.engine == "oracle":
+        fn = _grow_best_first_oracle if best_first else _grow_level_wise_oracle
+        depth = fn(forest, t, binned, X_raw, stats, node_of, params, rng,
+                   leaf_fn, num_lo, num_hi)
+    elif params.engine == "batched":
+        backend = resolve_backend(params.histogram_backend)
+        fn = _grow_best_first_batched if best_first else _grow_level_wise_batched
+        depth = fn(forest, t, binned, X_raw, stats, node_of, params, rng,
+                   leaf_fn, num_lo, num_hi, backend)
     else:
-        depth = _grow_level_wise(forest, t, binned, X_raw, stats, node_of,
-                                 params, rng, leaf_fn, num_lo, num_hi)
+        raise YdfError(f"Unknown growth engine {params.engine!r}. "
+                       "Expected one of: 'batched', 'oracle'.")
     forest.depth = max(forest.depth, depth)
     return node_of
 
 
 def _node_best_split(hist_slice, binned, sp, rng, X_raw, stats, node_of_c,
-                     n_slots, num_lo, num_hi, mask=None) -> list[Split]:
-    splits = best_splits(hist_slice, binned, sp, rng, feature_mask=mask)
+                     n_slots, num_lo, num_hi, mask=None,
+                     simple=False) -> list[Split]:
+    splits = best_splits(hist_slice, binned, sp, rng, feature_mask=mask,
+                         simple=simple)
     if sp.oblique and num_lo is not None:
         Fn = (~binned.is_cat).sum()
         if Fn:
@@ -114,8 +139,269 @@ def _node_best_split(hist_slice, binned, sp, rng, X_raw, stats, node_of_c,
     return splits
 
 
-def _grow_level_wise(forest, t, binned, X_raw, stats, node_of, params, rng,
-                     leaf_fn, num_lo, num_hi) -> int:
+# =====================================================================
+# Batched-frontier engine (the fast path)
+# =====================================================================
+
+# Sibling-subtraction cache cap (both growth strategies): above this many
+# cached float64s, histograms are rebuilt from scratch instead of cached.
+_HIST_CACHE_BUDGET = 1 << 25  # 32M f64 = 256 MB
+
+
+def _grow_level_wise_batched(forest, t, binned, X_raw, stats, node_of, params,
+                             rng, leaf_fn, num_lo, num_hi,
+                             backend: HistogramBackend) -> int:
+    sp = params.splitter
+    F = binned.n_features
+    S = stats.shape[1]
+    B = 256
+    codes = binned.codes
+    frontier = [0]
+    depth = 0
+    hist64 = None      # (n_front, F, B, S) f64 cache for sibling subtraction
+    # per current slot: parent's previous-level slot and sibling's current
+    # slot (-1 when the sibling left the frontier), example counts
+    par_of = sib_of = n_ex = None
+    for level in range(params.max_depth):
+        if not frontier:
+            break
+        n_front = len(frontier)
+        slot = np.full(forest.max_nodes, -1, np.int32)
+        slot[np.asarray(frontier)] = np.arange(n_front, dtype=np.int32)
+        node_of_c = np.where(node_of >= 0, slot[np.maximum(node_of, 0)], -1)
+        hist64_prev, hist64 = hist64, None
+        # subtraction pays only when accumulation (examples) outweighs the
+        # per-level cache assembly (n_front * B buckets per feature-stat).
+        # RANDOM categorical trials can tie exactly (masks differing only on
+        # empty categories), where the subtraction's 1-ulp drift could flip
+        # the argmax — build directly there to stay bit-identical.
+        sub_pays = (par_of is not None
+                    and backend.exact_subtraction
+                    and sp.categorical_algorithm != "RANDOM"
+                    and int(n_ex.sum()) > 4 * n_front * B)
+        if hist64_prev is None or not sub_pays:
+            hist64 = backend.build(codes, stats, node_of_c, n_front)
+        else:
+            # -- histogram subtraction across levels: accumulate only the
+            # smaller child of each pair, derive the sibling as parent - child
+            build_slot = np.full(n_front, -1, np.int32)
+            derive = []
+            nb = 0
+            for j in range(n_front):
+                sib = int(sib_of[j])
+                if sib < 0 or n_ex[j] < n_ex[sib] or (
+                        n_ex[j] == n_ex[sib] and j < sib):
+                    build_slot[j] = nb
+                    nb += 1
+                    if sib >= 0:
+                        derive.append(sib)
+            bmap = np.full(forest.max_nodes, -1, np.int32)
+            bmap[np.asarray(frontier)] = build_slot
+            node_of_b = np.where(node_of >= 0, bmap[np.maximum(node_of, 0)], -1)
+            built = backend.build(codes, stats, node_of_b, nb)
+            hist64 = np.empty((n_front, F, B, S), np.float64)
+            built_rows = np.where(build_slot >= 0)[0]
+            hist64[built_rows] = built[build_slot[built_rows]]
+            if derive:
+                der = np.asarray(derive, np.int32)
+                hist64[der] = hist64_prev[par_of[der]] - hist64[sib_of[der]]
+            del hist64_prev
+        hist = hist64.astype(np.float32)
+        mask = _feature_sample_mask(n_front, F, sp.num_candidate_ratio, rng)
+        splits = _node_best_split(hist, binned, sp, rng, X_raw, stats,
+                                  node_of_c, n_front, num_lo, num_hi, mask)
+        # -- allocate children (frontier order, shared node budget)
+        left_of = np.full(n_front, -1, np.int32)
+        for i, node in enumerate(frontier):
+            s = splits[i]
+            if not s.valid or forest.n_nodes[t] + 2 > params.max_nodes:
+                continue
+            left_of[i] = int(forest.n_nodes[t])
+            forest.n_nodes[t] += 2
+            _set_split(forest, t, node, s, binned)
+            forest.left_child[t, node] = left_of[i]
+            depth = level + 1
+        split_slots = np.where(left_of >= 0)[0]
+        if not len(split_slots):
+            break
+        # -- one vectorized apply_split pass over every routed example:
+        # axis-aligned conditions collapse to a per-slot (256,) go-right
+        # lookup over bin codes (b >= split_bin for numerical, set membership
+        # for categorical); oblique slots fall back to per-slot projection.
+        feat = np.array([s.feature for s in splits], np.int32)
+        table = np.zeros((n_front, 256), bool)
+        obl_slots = []
+        for i in split_slots:
+            s = splits[i]
+            if s.obl_features is not None:
+                obl_slots.append(i)
+            elif s.cat_right is not None:
+                table[i, s.cat_right] = True
+            else:
+                table[i, s.split_bin:] = True
+        ex = np.where((node_of_c >= 0)
+                      & (left_of[np.maximum(node_of_c, 0)] >= 0))[0]
+        sl = node_of_c[ex]
+        go = table[sl, codes[ex, np.maximum(feat[sl], 0)]]
+        for i in obl_slots:
+            m = sl == i
+            go[m] = apply_split(splits[i], binned, X_raw, ex[m])
+        node_of[ex] = left_of[sl] + go
+        # -- all child leaf stats in one flattened bincount over node_of
+        ci_of = np.full(n_front, -1, np.int64)
+        ci_of[split_slots] = np.arange(len(split_slots))
+        child_code = 2 * ci_of[sl] + go
+        n_child = 2 * len(split_slots)
+        csum = np.bincount(
+            (child_code[:, None] * S + np.arange(S)).ravel(),
+            weights=np.ascontiguousarray(stats[ex], np.float64).ravel(),
+            minlength=n_child * S).reshape(n_child, S)
+        child_n_ex = np.bincount(child_code, minlength=n_child)
+        # -- next frontier. A child below 2 * min_examples total weight can
+        # never produce a valid split, so it is pruned from the frontier
+        # (identical output, skipped work) — but only when the splitter
+        # consumes no randomness the pruning could shift: the per-node
+        # feature-sampling mask (one rng.choice per frontier node), RANDOM
+        # categorical trials and oblique projections (per-level draws that
+        # the oracle still makes for a frontier of unsplittable nodes).
+        prune = (sp.num_candidate_ratio >= 1.0
+                 and sp.categorical_algorithm != "RANDOM"
+                 and not (sp.oblique and num_lo is not None))
+        keep = csum[:, -1] >= 2 * sp.min_examples if prune else \
+            np.ones(n_child, bool)
+        new_frontier = []
+        par_l, sib_l, nex_l = [], [], []
+        for ci, i in enumerate(split_slots):
+            left = int(left_of[i])
+            forest.leaf_value[t, left] = leaf_fn(csum[2 * ci])
+            forest.leaf_value[t, left + 1] = leaf_fn(csum[2 * ci + 1])
+            kl, kr = bool(keep[2 * ci]), bool(keep[2 * ci + 1])
+            jl = len(new_frontier)
+            jr = jl + kl
+            if kl:
+                new_frontier.append(left)
+                par_l.append(i)
+                sib_l.append(jr if kr else -1)
+                nex_l.append(child_n_ex[2 * ci])
+            if kr:
+                new_frontier.append(left + 1)
+                par_l.append(i)
+                sib_l.append(jl if kl else -1)
+                nex_l.append(child_n_ex[2 * ci + 1])
+        frontier = new_frontier
+        if (len(new_frontier) * F * B * S > _HIST_CACHE_BUDGET):
+            hist64 = None  # cache too large: next level rebuilds from scratch
+        par_of = np.asarray(par_l, np.int32)
+        sib_of = np.asarray(sib_l, np.int32)
+        n_ex = np.asarray(nex_l, np.int64)
+    return depth
+
+
+def _grow_best_first_batched(forest, t, binned, X_raw, stats, node_of, params,
+                             rng, leaf_fn, num_lo, num_hi,
+                             backend: HistogramBackend) -> int:
+    """Leaf-wise growth with the parent-minus-sibling subtraction trick.
+
+    The heap holds (-gain, counter, node, depth, Split); a side store keeps,
+    per open leaf, its example index list and float64 histogram. On split,
+    only the smaller child's histogram is accumulated (over its own examples)
+    and the sibling's is derived as ``parent - child`` — O(smaller child)
+    per split instead of two O(N) passes.
+    """
+    sp = params.splitter
+    F = binned.n_features
+    N = binned.codes.shape[0]
+    oblique = sp.oblique and num_lo is not None
+
+    def build(idx: np.ndarray) -> np.ndarray:
+        return backend.build(binned.codes[idx], stats[idx],
+                             np.zeros(len(idx), np.int32), 1)
+
+    def eval_node(idx: np.ndarray, hist64: np.ndarray) -> Split:
+        m = _feature_sample_mask(1, F, sp.num_candidate_ratio, rng)
+        node_of_c = None
+        if oblique:  # oblique projections scan raw columns, not histograms
+            node_of_c = np.full(N, -1, np.int32)
+            node_of_c[idx] = 0
+        return _node_best_split(hist64.astype(np.float32), binned, sp, rng,
+                                X_raw, stats, node_of_c, 1, num_lo, num_hi,
+                                m)[0]
+
+    heap: list = []
+    counter = 0
+    # per open leaf: (example indices, f64 histogram or None). Histograms are
+    # cached only while the total stays under _HIST_CACHE_BUDGET; evicted
+    # entries (None) are rebuilt from the index list on pop.
+    store: dict[int, tuple[np.ndarray, np.ndarray | None]] = {}
+    hist_elems = F * 256 * stats.shape[1]
+    cached = 0
+
+    def stash(node: int, idx: np.ndarray, hist64: np.ndarray) -> None:
+        nonlocal cached
+        if (cached + 1) * hist_elems <= _HIST_CACHE_BUDGET:
+            store[node] = (idx, hist64)
+            cached += 1
+        else:
+            store[node] = (idx, None)
+
+    root_idx = np.where(node_of == 0)[0]
+    h0 = build(root_idx)
+    s0 = eval_node(root_idx, h0)
+    if s0.valid:
+        heapq.heappush(heap, (-s0.gain, counter, 0, 0, s0))
+        counter += 1
+        stash(0, root_idx, h0)
+    depth = 0
+    while heap and forest.n_nodes[t] + 2 <= params.max_nodes:
+        ngain, _, node, d, s = heapq.heappop(heap)
+        idx, hist_p = store.pop(node)
+        if hist_p is None:
+            hist_p = build(idx)
+        else:
+            cached -= 1
+        left = int(forest.n_nodes[t])
+        forest.n_nodes[t] += 2
+        _set_split(forest, t, node, s, binned)
+        forest.left_child[t, node] = left
+        go = apply_split(s, binned, X_raw, idx)
+        node_of[idx] = np.where(go, left + 1, left)
+        depth = max(depth, d + 1)
+        child_idx = {left: idx[~go], left + 1: idx[go]}
+        for child, cidx in child_idx.items():
+            forest.leaf_value[t, child] = leaf_fn(stats[cidx].sum(0))
+        want = {c: d + 1 < params.max_depth and len(ci) >= 2 * sp.min_examples
+                for c, ci in child_idx.items()}
+        if not any(want.values()):
+            continue
+        small = min((left, left + 1), key=lambda c: len(child_idx[c]))
+        big = 2 * left + 1 - small
+        hists = {small: build(child_idx[small])}
+        if want[big]:
+            # Build directly instead of subtracting when the backend does
+            # not accumulate in f64, or under RANDOM categoricals, whose
+            # trials can tie exactly (a 1-ulp drift could flip the argmax)
+            if (sp.categorical_algorithm == "RANDOM"
+                    or not backend.exact_subtraction):
+                hists[big] = build(child_idx[big])
+            else:
+                hists[big] = hist_p - hists[small]
+        for child in (left, left + 1):  # fixed order keeps the rng sequence
+            if not want[child]:
+                continue
+            cs = eval_node(child_idx[child], hists[child])
+            if cs.valid:
+                heapq.heappush(heap, (-cs.gain, counter, child, d + 1, cs))
+                counter += 1
+                stash(child, child_idx[child], hists[child])
+    return depth
+
+
+# =====================================================================
+# Oracle engine — the seed-equivalent simple module (paper §2.3)
+# =====================================================================
+
+def _grow_level_wise_oracle(forest, t, binned, X_raw, stats, node_of, params,
+                            rng, leaf_fn, num_lo, num_hi) -> int:
     sp = params.splitter
     F = binned.n_features
     frontier = [0]
@@ -128,10 +414,12 @@ def _grow_level_wise(forest, t, binned, X_raw, stats, node_of, params, rng,
         for n, i in slot_of_node.items():
             slot[n] = i
         node_of_c = np.where(node_of >= 0, slot[np.maximum(node_of, 0)], -1)
-        hist = build_histogram(binned.codes, stats, node_of_c, len(frontier))
+        hist = build_histogram(binned.codes, stats, node_of_c, len(frontier),
+                               backend="simple")
         mask = _feature_sample_mask(len(frontier), F, sp.num_candidate_ratio, rng)
         splits = _node_best_split(hist, binned, sp, rng, X_raw, stats,
-                                  node_of_c, len(frontier), num_lo, num_hi, mask)
+                                  node_of_c, len(frontier), num_lo, num_hi,
+                                  mask, simple=True)
         new_frontier = []
         for i, node in enumerate(frontier):
             s = splits[i]
@@ -153,8 +441,8 @@ def _grow_level_wise(forest, t, binned, X_raw, stats, node_of, params, rng,
     return depth
 
 
-def _grow_best_first(forest, t, binned, X_raw, stats, node_of, params, rng,
-                     leaf_fn, num_lo, num_hi) -> int:
+def _grow_best_first_oracle(forest, t, binned, X_raw, stats, node_of, params,
+                            rng, leaf_fn, num_lo, num_hi) -> int:
     """Leaf-wise growth. Heap holds (-gain, node, depth, Split)."""
     sp = params.splitter
     F = binned.n_features
@@ -162,10 +450,11 @@ def _grow_best_first(forest, t, binned, X_raw, stats, node_of, params, rng,
     def eval_node(node: int) -> Split:
         mask01 = (node_of == node).astype(np.int32)
         node_of_c = np.where(mask01 > 0, 0, -1).astype(np.int32)
-        hist = build_histogram(binned.codes, stats, node_of_c, 1)
+        hist = build_histogram(binned.codes, stats, node_of_c, 1,
+                               backend="simple")
         m = _feature_sample_mask(1, F, sp.num_candidate_ratio, rng)
         return _node_best_split(hist, binned, sp, rng, X_raw, stats, node_of_c,
-                                1, num_lo, num_hi, m)[0]
+                                1, num_lo, num_hi, m, simple=True)[0]
 
     heap: list = []
     counter = 0

@@ -34,6 +34,8 @@ class GBTHparams:
     early_stopping_patience: int = 30       # trees without improvement
     max_bins: int = 255
     loss: str = "DEFAULT"                   # DEFAULT | BINOMIAL | MULTINOMIAL | SQUARED_ERROR
+    growth_engine: str = "batched"          # batched | oracle (seed-equivalent)
+    histogram_backend: str = "auto"         # auto | numpy | pallas
 
 
 @dataclass(frozen=True)
@@ -54,6 +56,8 @@ class RFHparams:
     compute_oob: bool = True
     max_num_nodes: int = 4096
     max_bins: int = 255
+    growth_engine: str = "batched"          # batched | oracle (seed-equivalent)
+    histogram_backend: str = "auto"         # auto | numpy | pallas
 
 
 @dataclass(frozen=True)
@@ -64,6 +68,8 @@ class CartHparams:
     validation_ratio: float = 0.1           # for pruning
     max_num_nodes: int = 4096
     max_bins: int = 255
+    growth_engine: str = "batched"          # batched | oracle (seed-equivalent)
+    histogram_backend: str = "auto"         # auto | numpy | pallas
 
 
 # ---------------------------------------------------------------- templates

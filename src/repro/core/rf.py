@@ -59,7 +59,9 @@ class RandomForestLearner(Learner):
             num_candidate_ratio=ratio, oblique=oblique,
             oblique_num_projections_exponent=hp.sparse_oblique_num_projections_exponent)
         gp = GrowthParams(max_depth=hp.max_depth, max_nodes=hp.max_num_nodes,
-                          growing_strategy=hp.growing_strategy, splitter=sp)
+                          growing_strategy=hp.growing_strategy, splitter=sp,
+                          engine=hp.growth_engine,
+                          histogram_backend=hp.histogram_backend)
         n_num = int((~td.binned.is_cat).sum())
         forest = empty_forest(hp.num_trees, hp.max_num_nodes, out_dim,
                               oblique_dims=n_num if oblique else 0,

@@ -25,6 +25,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.binning import BinnedFeatures
+from repro.core.hist_backend import HistogramBackend, resolve_backend
 from repro.core.tree import MASK_WORDS
 
 NEG_INF = -1e30
@@ -67,23 +68,16 @@ class Split:
 # =====================================================================
 
 def build_histogram(codes: np.ndarray, stats: np.ndarray, node_of: np.ndarray,
-                    n_nodes: int, max_bins: int = 256) -> np.ndarray:
+                    n_nodes: int, max_bins: int = 256,
+                    backend: str | HistogramBackend | None = None) -> np.ndarray:
     """codes: (N, F) uint8; stats: (N, S) float32; node_of: (N,) int32 in
-    [-1, n_nodes) (-1 = inactive example). -> (n_nodes, F, B, S)."""
-    N, F = codes.shape
-    S = stats.shape[1]
-    act = node_of >= 0
-    codes_a = codes[act]
-    stats_a = stats[act]
-    node_a = node_of[act].astype(np.int64)
-    B = max_bins
-    out = np.zeros((n_nodes * F * B, S), np.float64)
-    base = node_a[:, None] * (F * B) + np.arange(F)[None, :] * B  # (n, F)
-    flat = (base + codes_a).ravel()
-    for s in range(S):
-        w = np.broadcast_to(stats_a[:, s:s + 1], (len(node_a), F)).ravel()
-        out[:, s] = np.bincount(flat, weights=w, minlength=n_nodes * F * B)
-    return out.reshape(n_nodes, F, B, S).astype(np.float32)
+    [-1, n_nodes) (-1 = inactive example). -> (n_nodes, F, B, S) float32.
+
+    Accumulation is delegated to a histogram backend (hist_backend.py): one
+    flattened bincount on the host, the one-hot-MXU Pallas kernel on TPU.
+    ``backend=None`` keeps the host path (the seed-equivalent oracle)."""
+    be = resolve_backend("numpy" if backend is None else backend)
+    return be.build(codes, stats, node_of, n_nodes, max_bins).astype(np.float32)
 
 
 # =====================================================================
@@ -129,9 +123,13 @@ def _order_key(stats: np.ndarray, kind: str) -> np.ndarray:
 
 def best_splits(hist: np.ndarray, binned: BinnedFeatures, params: SplitterParams,
                 rng: np.random.Generator,
-                feature_mask: np.ndarray | None = None) -> list[Split]:
+                feature_mask: np.ndarray | None = None,
+                simple: bool = False) -> list[Split]:
     """hist: (n_nodes, F, B, S) -> one Split per node (numerical+categorical).
-    feature_mask: optional (n_nodes, F) bool of candidate features per node."""
+    feature_mask: optional (n_nodes, F) bool of candidate features per node.
+    simple=True evaluates categorical features one at a time (the readable
+    ground-truth module, paper §2.3) instead of the batched scan; results are
+    bit-identical (tested)."""
     n_nodes, F, B, S = hist.shape
     kind, l2 = params.stat_kind, params.l2
     parent = hist.sum(axis=2)                       # (n_nodes, F, S)
@@ -144,7 +142,7 @@ def best_splits(hist: np.ndarray, binned: BinnedFeatures, params: SplitterParams
 
     gains = np.full((n_nodes, F), NEG_INF, np.float64)
     best_bin = np.zeros((n_nodes, F), np.int32)
-    cat_sets: dict[tuple[int, int], np.ndarray] = {}
+    cat_sets: dict[tuple[int, int], tuple] = {}     # lazy payloads (see below)
 
     # ---- numerical: ordered cumulative scan; split s: bins < s left
     if len(num_idx):
@@ -161,21 +159,29 @@ def best_splits(hist: np.ndarray, binned: BinnedFeatures, params: SplitterParams
         gains[:, num_idx] = np.take_along_axis(g, bi[..., None], 2)[..., 0]
         best_bin[:, num_idx] = bi + 1
 
-    # ---- categorical
-    for f in cat_idx:
-        hf = hist[:, f]                             # (n, B, S)
-        nb = int(binned.n_bins[f])
-        hf = hf[:, :nb]
+    # ---- categorical: all features of one algorithm evaluated in one batch
+    # (RANDOM keeps a per-feature loop so the rng draw order is unchanged;
+    # simple=True keeps the per-feature ground-truth handlers for all three)
+    if len(cat_idx):
+        one_hot = params.categorical_algorithm == "ONE_HOT" or (
+            kind == "class" and parent.shape[-1] > 3)
         if params.categorical_algorithm == "RANDOM":
-            _cat_random(f, hf, parent[:, f], parent_score[:, f], params, rng,
-                        gains, cat_sets)
-        elif params.categorical_algorithm == "ONE_HOT" or (
-                kind == "class" and parent.shape[-1] > 3):
-            _cat_one_hot(f, hf, parent[:, f], parent_score[:, f], params,
-                         gains, cat_sets)
+            for f in cat_idx:
+                nb = int(binned.n_bins[f])
+                _cat_random(f, hist[:, f, :nb], parent[:, f],
+                            parent_score[:, f], params, rng, gains, cat_sets)
+        elif simple:
+            for f in cat_idx:
+                nb = int(binned.n_bins[f])
+                handler = _cat_one_hot_simple if one_hot else _cat_cart_simple
+                handler(f, hist[:, f, :nb], parent[:, f], parent_score[:, f],
+                        params, gains, cat_sets, kind)
+        elif one_hot:
+            _cat_one_hot_batch(cat_idx, hist, binned, parent, parent_score,
+                               params, gains, cat_sets)
         else:
-            _cat_cart(f, hf, parent[:, f], parent_score[:, f], params,
-                      gains, cat_sets, kind)
+            _cat_cart_batch(cat_idx, hist, binned, parent, parent_score,
+                            params, gains, cat_sets, kind)
 
     if feature_mask is not None:
         gains = np.where(feature_mask, gains, NEG_INF)
@@ -184,11 +190,12 @@ def best_splits(hist: np.ndarray, binned: BinnedFeatures, params: SplitterParams
     for i in range(n_nodes):
         j = int(np.argmax(gains[i]))
         gain = float(gains[i, j])
-        if gain <= params.min_gain or not np.isfinite(gain):
+        if gain <= params.min_gain or gain <= NEG_INF or not np.isfinite(gain):
             out.append(Split())
             continue
         if is_cat[j]:
-            out.append(Split(gain=gain, feature=j, cat_right=cat_sets[(i, j)]))
+            out.append(Split(gain=gain, feature=j,
+                             cat_right=_materialize_cat(cat_sets[(i, j)])))
         else:
             sb = int(best_bin[i, j])
             out.append(Split(gain=gain, feature=j, split_bin=sb,
@@ -196,9 +203,23 @@ def best_splits(hist: np.ndarray, binned: BinnedFeatures, params: SplitterParams
     return out
 
 
-def _cat_cart(f, hf, parent, parent_score, params, gains, cat_sets, kind):
-    """Fisher-ordered prefix scan: sort categories by the order key, then scan
-    prefixes as if ordered (exact for binary/regression)."""
+def _materialize_cat(payload) -> np.ndarray:
+    """Candidate category sets are kept as lazy payloads during the scan and
+    only turned into sorted index arrays for the winning feature per node."""
+    tag = payload[0]
+    if tag == "cart":
+        _, order_row, bi, nb = payload
+        tail = order_row[bi + 1:]
+        return np.sort(tail[tail < nb]).astype(np.int32)
+    if tag == "onehot":
+        return np.array([payload[1]], np.int32)
+    return payload[1]                               # "set": precomputed
+
+
+def _cat_cart_simple(f, hf, parent, parent_score, params, gains, cat_sets,
+                     kind):
+    """Per-feature Fisher-ordered prefix scan — the seed ground-truth module
+    (paper §2.3) that `_cat_cart_batch` is verified against."""
     n_nodes, nb, S = hf.shape
     key = _order_key(hf, kind)                      # (n, nb)
     order = np.argsort(key, axis=1, kind="stable")  # (n, nb)
@@ -217,12 +238,15 @@ def _cat_cart(f, hf, parent, parent_score, params, gains, cat_sets, kind):
     for i in range(n_nodes):
         if gv[i] > gains[i, f]:
             gains[i, f] = gv[i]
-            cat_sets[(i, f)] = np.sort(order[i, bi[i] + 1:]).astype(np.int32)
+            cat_sets[(i, f)] = ("set",
+                                np.sort(order[i, bi[i] + 1:]).astype(np.int32))
 
 
-def _cat_one_hot(f, hf, parent, parent_score, params, gains, cat_sets):
-    """Single category vs rest (== one-hot encoding splits)."""
-    kind, l2 = params.stat_kind, params.l2
+def _cat_one_hot_simple(f, hf, parent, parent_score, params, gains, cat_sets,
+                        kind):
+    """Per-feature single-category-vs-rest scan — the seed ground-truth module
+    that `_cat_one_hot_batch` is verified against."""
+    l2 = params.l2
     left = parent[:, None, :] - hf                  # all but category b
     g = (_score(hf, kind, l2) + _score(left, kind, l2) - parent_score[:, None])
     ok = ((_counts(hf, kind) >= params.min_examples)
@@ -233,7 +257,64 @@ def _cat_one_hot(f, hf, parent, parent_score, params, gains, cat_sets):
     for i in range(hf.shape[0]):
         if gv[i] > gains[i, f]:
             gains[i, f] = gv[i]
-            cat_sets[(i, f)] = np.array([bi[i]], np.int32)
+            cat_sets[(i, f)] = ("onehot", int(bi[i]))
+
+
+def _cat_cart_batch(cat_idx, hist, binned, parent, parent_score, params,
+                    gains, cat_sets, kind):
+    """Fisher-ordered prefix scan (Fisher 1958 grouping; exact for
+    binary/regression), batched over every categorical feature at once.
+    Features are padded to the widest dictionary; padded bins sort last
+    (+inf key) and padded cut positions are masked, so per-feature results
+    are bit-identical to a per-feature scan."""
+    n_nodes = hist.shape[0]
+    nb = binned.n_bins[cat_idx].astype(np.int64)    # (Fc,)
+    Bmax = int(nb.max())
+    if Bmax < 2:
+        return
+    hf = hist[:, cat_idx, :Bmax]                    # (n, Fc, Bmax, S)
+    pad = np.arange(Bmax)[None, :] >= nb[:, None]   # (Fc, Bmax)
+    key = np.where(pad[None], np.inf, _order_key(hf, kind))
+    order = np.argsort(key, axis=2, kind="stable")  # (n, Fc, Bmax)
+    hs = np.take_along_axis(hf, order[..., None], axis=2)
+    cum = np.cumsum(hs, axis=2)[:, :, :-1]          # prefixes (n, Fc, Bmax-1, S)
+    right = parent[:, cat_idx, None, :] - cum
+    g = (_score(cum, kind, params.l2) + _score(right, kind, params.l2)
+         - parent_score[:, cat_idx, None])
+    ok = ((_counts(cum, kind) >= params.min_examples)
+          & (_counts(right, kind) >= params.min_examples)
+          & (np.arange(Bmax - 1)[None, :] < nb[:, None] - 1)[None])
+    g = np.where(ok, g, NEG_INF)
+    bi = np.argmax(g, axis=2)                       # (n, Fc)
+    gv = np.take_along_axis(g, bi[..., None], 2)[..., 0]
+    improve = gv > gains[:, cat_idx]
+    for i, fi in zip(*np.nonzero(improve)):
+        cat_sets[(i, cat_idx[fi])] = ("cart", order[i, fi], int(bi[i, fi]),
+                                      int(nb[fi]))
+    gains[:, cat_idx] = np.where(improve, gv, gains[:, cat_idx])
+
+
+def _cat_one_hot_batch(cat_idx, hist, binned, parent, parent_score, params,
+                       gains, cat_sets):
+    """Single category vs rest (== one-hot encoding splits), batched over
+    every categorical feature at once (padded bins masked)."""
+    kind, l2 = params.stat_kind, params.l2
+    nb = binned.n_bins[cat_idx].astype(np.int64)
+    Bmax = int(nb.max())
+    hf = hist[:, cat_idx, :Bmax]                    # (n, Fc, Bmax, S)
+    left = parent[:, cat_idx, None, :] - hf         # all but category b
+    g = (_score(hf, kind, l2) + _score(left, kind, l2)
+         - parent_score[:, cat_idx, None])
+    ok = ((_counts(hf, kind) >= params.min_examples)
+          & (_counts(left, kind) >= params.min_examples)
+          & (np.arange(Bmax)[None, :] < nb[:, None])[None])
+    g = np.where(ok, g, NEG_INF)
+    bi = np.argmax(g, axis=2)
+    gv = np.take_along_axis(g, bi[..., None], 2)[..., 0]
+    improve = gv > gains[:, cat_idx]
+    for i, fi in zip(*np.nonzero(improve)):
+        cat_sets[(i, cat_idx[fi])] = ("onehot", int(bi[i, fi]))
+    gains[:, cat_idx] = np.where(improve, gv, gains[:, cat_idx])
 
 
 def _cat_random(f, hf, parent, parent_score, params, rng, gains, cat_sets):
@@ -253,7 +334,8 @@ def _cat_random(f, hf, parent, parent_score, params, rng, gains, cat_sets):
     for i in range(n_nodes):
         if gv[i] > gains[i, f]:
             gains[i, f] = gv[i]
-            cat_sets[(i, f)] = np.where(masks[ti[i]])[0].astype(np.int32)
+            cat_sets[(i, f)] = ("set",
+                                np.where(masks[ti[i]])[0].astype(np.int32))
 
 
 # =====================================================================

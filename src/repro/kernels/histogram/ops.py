@@ -4,7 +4,13 @@ impl:
   * "pallas"    — compiled Pallas kernel (TPU target)
   * "interpret" — Pallas kernel body interpreted on CPU (correctness path)
   * "ref"       — pure-jnp oracle (segment_sum)
-  * None        — pallas on TPU, ref elsewhere
+  * "auto"/None — pallas on TPU, ref elsewhere
+
+Inputs may be numpy or jax arrays — the training path
+(``repro.core.hist_backend.PallasHistogramBackend``) feeds host numpy arrays
+straight in. ``n_nodes`` is a static shape argument: callers that invoke this
+in a loop over growing frontiers should pad it (the training backend pads to
+the next power of two) to bound jit recompilation.
 """
 from __future__ import annotations
 
@@ -16,7 +22,7 @@ from repro.kernels.histogram.ref import histogram_ref
 
 def histogram(codes, stats, node_of, n_nodes: int, n_bins: int = 256,
               impl: str | None = None):
-    if impl is None:
+    if impl is None or impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "ref":
         return histogram_ref(codes, stats, node_of, n_nodes, n_bins)

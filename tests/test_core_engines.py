@@ -1,8 +1,7 @@
 """Inference engines (§3.7): all engines agree; lossy compilation is explicit;
-per-kernel allclose vs the jnp oracle with hypothesis shape/dtype sweeps."""
+per-kernel sweeps vs the jnp oracle live in test_property_sweeps.py."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import repro.core.models as M
 from repro.core import GradientBoostedTreesLearner, RandomForestLearner, YdfError
@@ -56,41 +55,5 @@ def test_benchmark_inference_report(trained):
     assert "us/example" in rep and "vectorized" in rep
 
 
-# ------------------------------------------------------------------
-# hypothesis sweeps: kernels vs jnp oracle over shapes/dtypes
-# ------------------------------------------------------------------
-
-@settings(max_examples=15, deadline=None)
-@given(n=st.integers(1, 300), f=st.integers(1, 6), s=st.integers(1, 5),
-       nodes=st.integers(1, 9), bins=st.sampled_from([8, 32, 256]),
-       dt=st.sampled_from(["float32", "float64"]), seed=st.integers(0, 99))
-def test_histogram_kernel_sweep(n, f, s, nodes, bins, dt, seed):
-    import jax.numpy as jnp
-    from repro.kernels.histogram.ops import histogram
-    rng = np.random.default_rng(seed)
-    codes = rng.integers(0, bins, (n, f)).astype(np.uint8)
-    stats = rng.normal(size=(n, s)).astype(dt)
-    node_of = rng.integers(-1, nodes, n).astype(np.int32)
-    ref = np.asarray(histogram(jnp.asarray(codes), jnp.asarray(stats),
-                               jnp.asarray(node_of), nodes, bins, impl="ref"))
-    pal = np.asarray(histogram(jnp.asarray(codes), jnp.asarray(stats),
-                               jnp.asarray(node_of), nodes, bins,
-                               impl="interpret"))
-    np.testing.assert_allclose(pal, ref, atol=1e-4, rtol=1e-4)
-
-
-@settings(max_examples=10, deadline=None)
-@given(n=st.integers(1, 100), trees=st.integers(1, 5), seed=st.integers(0, 99))
-def test_forest_infer_kernel_sweep(n, trees, seed):
-    """Random trained forests (incl. categorical masks) on random inputs."""
-    from repro.core.tree import predict_raw
-    from repro.kernels.forest_infer.ops import forest_predict
-    rng = np.random.default_rng(seed)
-    train, _ = train_test_split(adult_like(300, seed=seed), 0.3, seed)
-    m = GradientBoostedTreesLearner(label="income", num_trees=trees,
-                                    max_depth=4, seed=seed).train(train)
-    ds = M._as_vertical(train, m.spec)
-    X = M.raw_matrix(ds, m.features)[:n]
-    want = predict_raw(m.forest, X)
-    got = np.asarray(forest_predict(m.forest, X, impl="interpret"))
-    np.testing.assert_allclose(got, want, atol=1e-5)
+# hypothesis shape/dtype sweeps for the kernels live in
+# tests/test_property_sweeps.py (skipped when hypothesis is unavailable)

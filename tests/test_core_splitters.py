@@ -3,7 +3,6 @@
 property-based invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.binning import BinnedFeatures, bin_features
 from repro.core.dataspec import dataset_from_raw
@@ -89,27 +88,6 @@ def test_min_examples_respected():
     hist = build_histogram(binned.codes, stats, np.zeros(n, np.int32), 1)
     split = best_splits(hist, binned, params, np.random.default_rng(0))[0]
     assert not split.valid  # the only cut violates min_examples
-
-
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(10, 120), f=st.integers(1, 4), nodes=st.integers(1, 5),
-       bins=st.sampled_from([4, 16, 64]), seed=st.integers(0, 10_000))
-def test_histogram_partition_property(n, f, nodes, bins, seed):
-    """Histogram totals == direct per-node sums; bins partition examples."""
-    rng = np.random.default_rng(seed)
-    codes = rng.integers(0, bins, (n, f)).astype(np.uint8)
-    stats = _gh_stats(rng, n)
-    node_of = rng.integers(-1, nodes, n).astype(np.int32)
-    hist = build_histogram(codes, stats, node_of, nodes, bins)
-    assert hist.shape == (nodes, f, bins, 3)
-    for node in range(nodes):
-        sel = node_of == node
-        np.testing.assert_allclose(hist[node, 0].sum(0), stats[sel].sum(0),
-                                   atol=1e-4)
-        # identical totals across features (each feature sees every example)
-        np.testing.assert_allclose(hist[node].sum(1),
-                                   np.broadcast_to(stats[sel].sum(0), (f, 3)),
-                                   atol=1e-4)
 
 
 def test_oblique_splits_fold_normalization():

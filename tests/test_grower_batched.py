@@ -1,0 +1,169 @@
+"""Batched-frontier training engine vs the seed-equivalent oracle (§2.3).
+
+The "oracle" growth engine is the simple module — per-node partition loops,
+full-N histogram rebuilds, example-major histogram accumulation. The
+"batched" engine (vectorized apply_split, flattened-bincount leaf stats,
+parent-minus-sibling histogram subtraction, pluggable histogram backend)
+must produce bit-identical forests at equal seeds.
+"""
+import numpy as np
+import pytest
+
+from repro.core import GradientBoostedTreesLearner, RandomForestLearner, YdfError
+from repro.core.api import Task
+from repro.core.cart import CartLearner
+from repro.core.hist_backend import (
+    NumpyHistogramBackend,
+    PallasHistogramBackend,
+    SimpleHistogramBackend,
+    resolve_backend,
+)
+from repro.data.tabular import SUITE, adult_like, make_dataset, train_test_split
+
+FOREST_KEYS = ["feature", "threshold", "split_bin", "cat_mask", "left_child",
+               "leaf_value", "n_nodes"]
+
+
+def _assert_forests_identical(a, b, msg=""):
+    for k in FOREST_KEYS:
+        np.testing.assert_array_equal(getattr(a, k), getattr(b, k),
+                                      err_msg=f"{msg}: forest.{k} differs")
+    if a.obl_weights is not None and (a.feature == -2).any():
+        np.testing.assert_array_equal(a.obl_weights, b.obl_weights, err_msg=msg)
+        np.testing.assert_array_equal(a.obl_features, b.obl_features, err_msg=msg)
+
+
+@pytest.fixture(scope="module")
+def adult():
+    return train_test_split(adult_like(900), 0.3, 1)[0]
+
+
+# ---------------------------------------------------------------- engines
+
+@pytest.mark.parametrize("hp", [
+    dict(),                                               # LOCAL, CART cats
+    dict(growing_strategy="BEST_FIRST_GLOBAL"),           # subtraction trick
+    dict(categorical_algorithm="ONE_HOT"),
+    dict(subsample=0.7, use_hessian_gain=True),           # bagging + dup stats
+    dict(template="benchmark_rank1"),                     # oblique + RANDOM + bf
+    # deep RANDOM cats: rng drift regression (pruning must stay disabled when
+    # the splitter draws per-level randomness the oracle would still consume)
+    dict(categorical_algorithm="RANDOM", max_depth=8),
+])
+def test_gbt_batched_bit_identical_to_oracle(adult, hp):
+    kw = dict(label="income", num_trees=6)
+    tmpl = hp.pop("template", None)
+    mo = GradientBoostedTreesLearner(**kw, template=tmpl, growth_engine="oracle",
+                                     **hp).train(adult)
+    mb = GradientBoostedTreesLearner(**kw, template=tmpl, growth_engine="batched",
+                                     **hp).train(adult)
+    _assert_forests_identical(mo.forest, mb.forest, str(hp))
+
+
+def test_rf_and_cart_batched_bit_identical_to_oracle(adult):
+    for hp in (dict(num_trees=4, max_depth=10),           # sqrt feature mask
+               dict(num_trees=3, growing_strategy="BEST_FIRST_GLOBAL",
+                    max_num_nodes=128)):
+        mo = RandomForestLearner(label="income", growth_engine="oracle",
+                                 **hp).train(adult)
+        mb = RandomForestLearner(label="income", growth_engine="batched",
+                                 **hp).train(adult)
+        _assert_forests_identical(mo.forest, mb.forest, str(hp))
+    mo = CartLearner(label="income", growth_engine="oracle").train(adult)
+    mb = CartLearner(label="income", growth_engine="batched").train(adult)
+    _assert_forests_identical(mo.forest, mb.forest, "cart")
+
+
+def test_rf_regression_batched_bit_identical(adult):
+    train, _ = train_test_split(make_dataset(SUITE[7]), 0.3, SUITE[7].seed)
+    mo = RandomForestLearner(label="label", task=Task.REGRESSION, num_trees=4,
+                             max_depth=9, growth_engine="oracle").train(train)
+    mb = RandomForestLearner(label="label", task=Task.REGRESSION, num_trees=4,
+                             max_depth=9, growth_engine="batched").train(train)
+    _assert_forests_identical(mo.forest, mb.forest, "rf_reg")
+
+
+def test_unknown_engine_and_backend_raise(adult):
+    with pytest.raises(YdfError, match="growth engine"):
+        GradientBoostedTreesLearner(label="income", num_trees=1,
+                                    growth_engine="warp").train(adult)
+    with pytest.raises(YdfError, match="histogram_backend"):
+        resolve_backend("cuda")
+
+
+# ---------------------------------------------------------------- backends
+
+def _random_mixed(seed, n=400, f_num=3, f_cat=3, s=4):
+    """Mixed numerical/categorical codes with inactive (-1) examples and a
+    duplicated stat column (the GBT hessian-gain-off layout)."""
+    rng = np.random.default_rng(seed)
+    codes = np.concatenate(
+        [rng.integers(0, 256, (n, f_num)).astype(np.uint8),
+         rng.integers(0, 9, (n, f_cat)).astype(np.uint8)], axis=1)
+    g = rng.normal(size=n)
+    w = rng.integers(0, 3, n).astype(np.float64)
+    stats = np.stack([g * w, w, np.abs(g) * w, w], 1)[:, :s]
+    node_of = rng.integers(-1, 5, n).astype(np.int32)
+    return codes, stats, node_of
+
+
+def test_numpy_backend_matches_simple_bitwise():
+    """The vectorized feature-major bincount == the seed example-major pass."""
+    for seed in range(5):
+        codes, stats, node_of = _random_mixed(seed)
+        a = SimpleHistogramBackend().build(codes, stats, node_of, 5)
+        b = NumpyHistogramBackend().build(codes, stats, node_of, 5)
+        np.testing.assert_array_equal(a, b)
+
+
+def test_subtraction_trick_matches_direct_build():
+    """parent - smaller child == directly-built sibling histogram."""
+    codes, stats, node_of = _random_mixed(7, n=600)
+    be = NumpyHistogramBackend()
+    act = node_of >= 0
+    idx = np.where(act)[0]
+    parent = be.build(codes[idx], stats[idx], np.zeros(len(idx), np.int32), 1)
+    go = codes[idx, 0] >= 128
+    small, big = idx[~go], idx[go]
+    if len(small) > len(big):
+        small, big = big, small
+    h_small = be.build(codes[small], stats[small],
+                       np.zeros(len(small), np.int32), 1)
+    h_big = be.build(codes[big], stats[big], np.zeros(len(big), np.int32), 1)
+    np.testing.assert_allclose(parent - h_small, h_big, rtol=1e-9, atol=1e-9)
+    # float32 gain-scan inputs are bit-identical in practice
+    np.testing.assert_array_equal((parent - h_small).astype(np.float32),
+                                  h_big.astype(np.float32))
+
+
+def test_pallas_backend_matches_numpy():
+    """histogram_pallas (interpret mode on CPU) == numpy backend on mixed
+    data with inactive examples, including the n_nodes padding path."""
+    codes, stats, node_of = _random_mixed(11, n=300)
+    ref = NumpyHistogramBackend().build(codes, stats, node_of, 5)
+    pal = PallasHistogramBackend(interpret=True).build(codes, stats, node_of, 5)
+    assert pal.shape == ref.shape
+    np.testing.assert_allclose(pal, ref, atol=1e-3, rtol=1e-4)
+
+
+def test_backend_auto_resolution_is_hardware_aware():
+    import jax
+    be = resolve_backend("auto")
+    want = "pallas" if jax.default_backend() == "tpu" else "numpy"
+    assert be.name == want
+    assert resolve_backend(be) is be  # instances pass through
+
+
+@pytest.mark.slow
+def test_training_with_pallas_backend_matches_numpy(adult):
+    """End-to-end wiring: histogram_backend="pallas" (interpret mode on CPU)
+    grows the same trees as the numpy backend up to f32 accumulation."""
+    small = {k: np.asarray(v)[:150] for k, v in adult.items()}
+    kw = dict(label="income", num_trees=2, max_depth=3, validation_ratio=0.0,
+              early_stopping="NONE")
+    m_np = GradientBoostedTreesLearner(**kw, histogram_backend="numpy").train(small)
+    m_pl = GradientBoostedTreesLearner(**kw, histogram_backend="pallas").train(small)
+    f_np, f_pl = m_np.forest, m_pl.forest
+    np.testing.assert_array_equal(f_np.feature, f_pl.feature)
+    np.testing.assert_array_equal(f_np.split_bin, f_pl.split_bin)
+    np.testing.assert_allclose(f_np.leaf_value, f_pl.leaf_value, atol=1e-5)

@@ -1,0 +1,79 @@
+"""Hypothesis property sweeps (kernels vs oracles over random shapes/dtypes).
+
+Kept in their own module so the rest of the engine/splitter tests stay
+runnable when hypothesis is not installed: ``pytest.importorskip`` skips only
+this file at collection time.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import repro.core.models as M  # noqa: E402
+from repro.core import GradientBoostedTreesLearner  # noqa: E402
+from repro.data.tabular import adult_like, train_test_split  # noqa: E402
+
+
+def _gh_stats(rng, n):
+    g = rng.normal(size=n)
+    h = np.abs(rng.normal(size=n)) + 0.1
+    return np.stack([g, h, np.ones(n)], 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(10, 120), f=st.integers(1, 4), nodes=st.integers(1, 5),
+       bins=st.sampled_from([4, 16, 64]), seed=st.integers(0, 10_000))
+def test_histogram_partition_property(n, f, nodes, bins, seed):
+    """Histogram totals == direct per-node sums; bins partition examples."""
+    from repro.core.splitters import build_histogram
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, bins, (n, f)).astype(np.uint8)
+    stats = _gh_stats(rng, n)
+    node_of = rng.integers(-1, nodes, n).astype(np.int32)
+    hist = build_histogram(codes, stats, node_of, nodes, bins)
+    assert hist.shape == (nodes, f, bins, 3)
+    for node in range(nodes):
+        sel = node_of == node
+        np.testing.assert_allclose(hist[node, 0].sum(0), stats[sel].sum(0),
+                                   atol=1e-4)
+        # identical totals across features (each feature sees every example)
+        np.testing.assert_allclose(hist[node].sum(1),
+                                   np.broadcast_to(stats[sel].sum(0), (f, 3)),
+                                   atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 300), f=st.integers(1, 6), s=st.integers(1, 5),
+       nodes=st.integers(1, 9), bins=st.sampled_from([8, 32, 256]),
+       dt=st.sampled_from(["float32", "float64"]), seed=st.integers(0, 99))
+def test_histogram_kernel_sweep(n, f, s, nodes, bins, dt, seed):
+    import jax.numpy as jnp
+    from repro.kernels.histogram.ops import histogram
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, bins, (n, f)).astype(np.uint8)
+    stats = rng.normal(size=(n, s)).astype(dt)
+    node_of = rng.integers(-1, nodes, n).astype(np.int32)
+    ref = np.asarray(histogram(jnp.asarray(codes), jnp.asarray(stats),
+                               jnp.asarray(node_of), nodes, bins, impl="ref"))
+    pal = np.asarray(histogram(jnp.asarray(codes), jnp.asarray(stats),
+                               jnp.asarray(node_of), nodes, bins,
+                               impl="interpret"))
+    np.testing.assert_allclose(pal, ref, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 100), trees=st.integers(1, 5), seed=st.integers(0, 99))
+def test_forest_infer_kernel_sweep(n, trees, seed):
+    """Random trained forests (incl. categorical masks) on random inputs."""
+    from repro.core.tree import predict_raw
+    from repro.kernels.forest_infer.ops import forest_predict
+    rng = np.random.default_rng(seed)
+    train, _ = train_test_split(adult_like(300, seed=seed), 0.3, seed)
+    m = GradientBoostedTreesLearner(label="income", num_trees=trees,
+                                    max_depth=4, seed=seed).train(train)
+    ds = M._as_vertical(train, m.spec)
+    X = M.raw_matrix(ds, m.features)[:n]
+    want = predict_raw(m.forest, X)
+    got = np.asarray(forest_predict(m.forest, X, impl="interpret"))
+    np.testing.assert_allclose(got, want, atol=1e-5)
