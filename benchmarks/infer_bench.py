@@ -1,0 +1,144 @@
+"""Inference-throughput benchmark: the compiled serving stack vs the seed
+per-call path. Writes BENCH_infer.json (the serving perf-trajectory
+baseline, tracked like BENCH_train.json; paper Tab. 2 analogue for
+*inference* — see DESIGN.md §5).
+
+"before" = the seed path: every predict call re-walks the dataspec
+(encode_dataset), re-imputes into a raw matrix (raw_matrix) and runs the
+generic lockstep traversal (tree.predict_raw) — per-call conversion, no
+reuse.
+"after"  = CompiledPredictor.predict per engine (§5.1): raw→code encode
+tables, specialized/device-resident traversal and the output head compiled
+once, then reused for every request batch.
+
+Every timed pair is checked for allclose predictions (the §2.3 contract).
+Engine compile time is reported separately (it is paid once, not per call).
+
+Usage: python benchmarks/infer_bench.py [--rows N] [--trees T] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import numpy as np
+
+from repro.core import GradientBoostedTreesLearner, RandomForestLearner
+from repro.core.dataspec import encode_dataset
+from repro.core.models import raw_matrix
+from repro.core.tree import predict_raw
+from repro.data.tabular import adult_like, train_test_split
+
+
+def _seed_predict(model, data) -> np.ndarray:
+    """The per-call path as it stood at the seed: full conversion + generic
+    traversal on every call."""
+    ds = encode_dataset(data, model.spec)
+    X = raw_matrix(ds, model.features)
+    return model._finalize(predict_raw(model.forest, X))
+
+
+def _best_of(fns: list, reps: int) -> tuple[list[float], list]:
+    """Best-of-reps per candidate, reps interleaved so background load
+    perturbs every candidate equally (same protocol as train_bench)."""
+    best = [np.inf] * len(fns)
+    outs = [None] * len(fns)
+    for _ in range(reps):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            outs[i] = fn()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best, outs
+
+
+def run(rows: int = 100_000, num_trees: int = 30, reps: int = 3,
+        verbose: bool = True, include_interpret: bool = False) -> dict:
+    import jax
+    on_tpu = jax.default_backend() == "tpu"
+    train, _ = train_test_split(adult_like(max(2000, min(rows, 4000))), 0.3, 1)
+    serve = adult_like(rows, seed=7)
+    serve.pop("income")  # serving requests carry features only (§5.1)
+
+    out: dict = {
+        "benchmark": "infer_bench",
+        "host": {"platform": platform.platform(), "numpy": np.__version__,
+                 "jax_backend": jax.default_backend()},
+        "rows": rows,
+        "num_trees": num_trees,
+        "configs": {},
+    }
+    models = [
+        ("gbt_adult", GradientBoostedTreesLearner(
+            label="income", num_trees=num_trees).train(train)),
+        ("rf_adult", RandomForestLearner(
+            label="income", num_trees=max(10, num_trees // 3),
+            max_depth=12).train(train)),
+    ]
+    for name, model in models:
+        # the seed path needs every dataspec column present
+        seed_batch = dict(serve)
+        seed_batch["income"] = np.full(rows, "<=50K", object)
+
+        engines = ["vectorized"] + (["pallas"] if on_tpu else [])
+        if include_interpret and not on_tpu:
+            engines.append("pallas")
+        fns = [lambda m=model, b=seed_batch: _seed_predict(m, b)]
+        compile_s = {}
+        small = {k: v[:64] for k, v in serve.items()}
+        for ename in engines:
+            t0 = time.perf_counter()
+            from repro.core.engines import compile_predictor
+            pred = compile_predictor(model, ename)
+            if ename == "pallas":
+                # jit'd: the trace/XLA-compile happens on the first call at
+                # the timed shape — that IS the one-time compile cost
+                pred.predict(serve)
+                compile_s[ename] = time.perf_counter() - t0
+            else:
+                # non-jit: compile cost is the specialization alone; warm
+                # the code path untimed on a small slice
+                compile_s[ename] = time.perf_counter() - t0
+                pred.predict(small)
+            fns.append(lambda p=pred: p.predict(serve))
+        times, preds = _best_of(fns, reps)
+        t_before = times[0]
+        row = {"n_rows": rows,
+               "us_example_before": round(t_before / rows * 1e6, 3),
+               "after": {}}
+        for k, ename in enumerate(engines, start=1):
+            row["after"][ename] = {
+                "us_example": round(times[k] / rows * 1e6, 3),
+                "speedup": round(t_before / times[k], 3),
+                "compile_s": round(compile_s[ename], 4),
+                "allclose": bool(np.allclose(preds[k], preds[0], atol=1e-5)),
+            }
+        out["configs"][name] = row
+        if verbose:
+            a = row["after"]["vectorized"]
+            print(f"  {name:12s} n={rows:<7d} before={row['us_example_before']:8.2f} "
+                  f"us/ex  compiled={a['us_example']:8.2f} us/ex  "
+                  f"speedup={a['speedup']:5.2f}x  allclose={a['allclose']}",
+                  flush=True)
+    out["headline_speedup"] = out["configs"]["gbt_adult"]["after"][
+        "vectorized"]["speedup"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=100_000)
+    ap.add_argument("--trees", type=int, default=30)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_infer.json")
+    args = ap.parse_args()
+    res = run(rows=args.rows, num_trees=args.trees, reps=args.reps)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"headline (gbt_adult, compiled vectorized vs seed per-call path): "
+          f"{res['headline_speedup']:.2f}x -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,8 @@
   accuracy_rank   — Fig. 6 mean ranks + Tab. 3 pairwise wins
   speed           — Tab. 2 train/inference seconds
   engines_bench   — App. B.4 per-engine us/example
+  infer_bench     — DESIGN.md §5 compiled serving stack vs seed per-call
+                    path (BENCH_infer.json when run as a module)
   distributed_df  — §3.9 traffic scaling
   roofline_report — assignment §Roofline/§Dry-run tables (from results/)
 """
@@ -19,7 +21,8 @@ def main() -> None:
     ap.add_argument("--skip", nargs="*", default=[])
     args = ap.parse_args()
 
-    from benchmarks import accuracy_rank, distributed_df, engines_bench, speed
+    from benchmarks import accuracy_rank, distributed_df, engines_bench, \
+        infer_bench, speed
 
     t_all = time.time()
     if "speed" not in args.skip:
@@ -28,6 +31,12 @@ def main() -> None:
     if "engines" not in args.skip:
         print("== engines (paper App. B.4) ==", flush=True)
         engines_bench.run()
+    if "infer" not in args.skip:
+        print("== inference serving stack (DESIGN.md §5) ==", flush=True)
+        res = infer_bench.run(rows=20_000, reps=2)
+        print(f"  headline: {res['headline_speedup']:.2f}x compiled "
+              "vectorized vs seed per-call path "
+              "(full 100k-row run: python -m benchmarks.infer_bench)")
     if "distributed" not in args.skip:
         print("== distributed DF traffic (paper §3.9) ==", flush=True)
         distributed_df.run()

@@ -38,3 +38,6 @@ model.save("/tmp/quickstart_model")
 from repro.core import Model
 print("\nreloaded prediction head:",
       Model.load("/tmp/quickstart_model").predict(test)[:3])
+
+# 8. production serving — compiled predictors, micro-batching, BENCH_infer:
+#    see examples/serve_forest.py (DESIGN.md §5)

@@ -40,6 +40,8 @@ def __getattr__(name):
         "FeatureSelector": "repro.core.metalearners",
         "cross_validate": "repro.core.metalearners",
         "benchmark_inference": "repro.core.engines",
+        "CompiledPredictor": "repro.core.engines",
+        "compile_predictor": "repro.core.engines",
     }
     if name in lazy:
         import importlib

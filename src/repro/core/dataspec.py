@@ -236,6 +236,31 @@ class VerticalDataset:
         )
 
 
+def _parse_numerical(vals: np.ndarray) -> np.ndarray:
+    """Raw object column -> float32 with NaN for missing/unparsable. The
+    single parse used by encode_dataset AND the compiled BatchEncoder (§5.1)
+    so training-time and serving-time encodes can never drift apart."""
+    try:
+        return vals.astype(np.float64).astype(np.float32)
+    except (TypeError, ValueError):
+        out = np.full(len(vals), np.nan, np.float32)
+        for i, v in enumerate(vals):
+            if not _is_missing(v):
+                f = _try_float(v)
+                out[i] = np.nan if f is None else f
+        return out
+
+
+def _parse_boolean(vals: np.ndarray) -> np.ndarray:
+    """Raw object column -> int32 {0, 1} with -1 for missing (shared by
+    encode_dataset and BatchEncoder, like ``_parse_numerical``)."""
+    miss = _missing_mask(vals)
+    s = np.char.lower(np.char.strip(vals.astype(str)))
+    out = np.isin(s, ("1", "1.0", "true")).astype(np.int32)
+    out[miss] = -1
+    return out
+
+
 def encode_dataset(data: Mapping[str, Any], spec: DataSpec) -> VerticalDataset:
     numerical: dict[str, np.ndarray] = {}
     categorical: dict[str, np.ndarray] = {}
@@ -249,21 +274,9 @@ def encode_dataset(data: Mapping[str, Any], spec: DataSpec) -> VerticalDataset:
         vals = np.asarray(data[name], dtype=object).ravel()
         n_rows = len(vals)
         if col.semantic == Semantic.NUMERICAL:
-            try:
-                out = vals.astype(np.float64).astype(np.float32)
-            except (TypeError, ValueError):
-                out = np.full(len(vals), np.nan, np.float32)
-                for i, v in enumerate(vals):
-                    if not _is_missing(v):
-                        f = _try_float(v)
-                        out[i] = np.nan if f is None else f
-            numerical[name] = out
+            numerical[name] = _parse_numerical(vals)
         elif col.semantic == Semantic.BOOLEAN:
-            miss = _missing_mask(vals)
-            s = np.char.lower(np.char.strip(vals.astype(str)))
-            out = np.isin(s, ("1", "1.0", "true")).astype(np.int32)
-            out[miss] = -1
-            categorical[name] = out
+            categorical[name] = _parse_boolean(vals)
         else:
             lookup = {v: i for i, v in enumerate(col.vocab)}
             miss = _missing_mask(vals)
@@ -279,6 +292,85 @@ def encode_dataset(data: Mapping[str, Any], spec: DataSpec) -> VerticalDataset:
 
 def dataset_from_raw(data: Mapping[str, Any], **kw) -> VerticalDataset:
     return encode_dataset(data, infer_dataspec(data, **kw))
+
+
+# ------------------------------------------- compiled row encoding (§5.1)
+
+class BatchEncoder:
+    """Vectorized raw->code tables, compiled once per (spec, features).
+
+    The per-call predict path walks the dataspec, builds per-unique-value
+    python dict lookups (``encode_dataset``) and then re-imputes in a second
+    pass (``raw_matrix``) — on every request. Compiling a model
+    (DESIGN.md §5.1) bakes those decisions into flat tables up front:
+
+      numerical   -> bulk float cast + the column's mean as imputation value
+      boolean     -> truthy-string table, missing -> 0
+      categorical -> sorted-vocab ``searchsorted`` table with the matching
+                     code permutation; out-of-dictionary -> 0 (OOD), missing
+                     -> most-frequent (code 1) exactly like global imputation
+
+    ``encode`` then returns the same (N, F) float32 matrix as
+    ``raw_matrix(encode_dataset(data, spec), features)``, without dict
+    lookups or a second pass — and, unlike the training-path encoder, only
+    requires the *feature* columns (serving requests carry no label).
+    """
+
+    def __init__(self, spec: DataSpec, features: list[str]):
+        self.spec = spec
+        self.features = list(features)
+        self._plan: list[tuple] = []
+        for name in self.features:
+            col = spec[name]
+            if col.semantic == Semantic.NUMERICAL:
+                self._plan.append(("num", name, np.float32(col.mean), None, None))
+            elif col.semantic == Semantic.BOOLEAN:
+                fill = np.float32(1.0 if col.vocab_size > 1 else 0.0)
+                self._plan.append(("bool", name, fill, None, None))
+            else:
+                vocab = np.asarray(col.vocab, dtype=str)
+                order = np.argsort(vocab, kind="stable")
+                fill = np.float32(1.0 if col.vocab_size > 1 else 0.0)
+                self._plan.append(("cat", name, fill, vocab[order],
+                                   order.astype(np.int32)))
+
+    def encode(self, data) -> np.ndarray:
+        """data: raw column mapping (feature columns only suffice) or an
+        already-encoded VerticalDataset. -> (N, F) float32 raw matrix."""
+        if isinstance(data, VerticalDataset):
+            from repro.core.models import raw_matrix
+            return raw_matrix(data, self.features)
+        missing = [n for n in self.features if n not in data]
+        if missing:
+            raise YdfError(
+                f"Feature column(s) {missing} are missing from the request "
+                f"batch. The model requires: {self.features}.")
+        first = np.asarray(data[self.features[0]], dtype=object).ravel() \
+            if self.features else np.zeros(0, object)
+        X = np.empty((len(first), len(self.features)), np.float32)
+        for j, (kind, name, fill, sorted_vocab, codes) in enumerate(self._plan):
+            vals = np.asarray(data[name], dtype=object).ravel()
+            if len(vals) != len(first):
+                raise YdfError(
+                    f"Feature column {name!r} has {len(vals)} values but "
+                    f"{self.features[0]!r} has {len(first)}; request batches "
+                    "must be rectangular.")
+            if kind == "num":
+                v = _parse_numerical(vals)
+                v[np.isnan(v)] = fill
+            elif kind == "bool":
+                v = _parse_boolean(vals).astype(np.float32)
+                v[v < 0] = fill
+            else:
+                miss = _missing_mask(vals)
+                s = vals.astype(str)
+                pos = np.searchsorted(sorted_vocab, s)
+                pos_c = np.minimum(pos, len(sorted_vocab) - 1)
+                found = sorted_vocab[pos_c] == s
+                v = np.where(found, codes[pos_c], 0).astype(np.float32)
+                v[miss] = fill
+            X[:, j] = v
+        return X
 
 
 # ----------------------------------------------------------------- labels

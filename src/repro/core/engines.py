@@ -1,18 +1,29 @@
-"""Inference engines (paper §3.7): a Model *compiles* — possibly lossily — to
-the fastest engine compatible with its structure and the hardware.
+"""Inference engines and the compiled serving stack (paper §3.7;
+DESIGN.md §5): a Model *compiles* — possibly lossily — to the fastest engine
+compatible with its structure and the hardware.
 
 Engines (ordered by preference):
-  * "pallas"     — VMEM-tiled lockstep traversal (repro/kernels/forest_infer);
-                   requires axis-aligned numerical/categorical conditions and
-                   node counts that fit the kernel's VMEM budget. On CPU runs
-                   in interpret mode (correctness path); TPU is the target.
-  * "vectorized" — numpy lockstep traversal (tree.predict_raw).
+  * "pallas"     — tree-tiled lockstep traversal over the depth-packed
+                   layout (repro/kernels/forest_infer, §5.2–§5.3); requires
+                   axis-aligned numerical/categorical conditions. Node count
+                   is unbounded (the old 4096-node VMEM ceiling is gone —
+                   large forests tile instead of raising). On CPU runs in
+                   interpret mode (correctness path); TPU is the target.
+  * "vectorized" — specialized numpy lockstep traversal
+                   (tree.compile_predict_raw, §5.1).
   * "naive"      — Algorithm 1 of the paper: per-example while-loop. Readable
                    oracle; always compatible.
 
 ``compile_model(model)`` picks the best compatible engine; requesting an
 incompatible engine by name raises with the reason (lossy-compilation made
 explicit, §2.1).
+
+``compile_predictor(model)`` builds the full serving artifact (§5.1): a
+``CompiledPredictor`` bundles the engine closure with pre-compiled raw→code
+encode tables (dataspec.BatchEncoder) and the model's output head, so a
+request batch pays exactly one vectorized encode + one engine call + one
+aggregation — no dataspec walk, no host round-trips, no re-upload.
+``Model.predict`` caches one and reuses it across calls.
 """
 from __future__ import annotations
 
@@ -23,7 +34,8 @@ from typing import Callable
 import numpy as np
 
 from repro.core.api import YdfError
-from repro.core.tree import Forest, predict_naive, predict_raw
+from repro.core.dataspec import BatchEncoder
+from repro.core.tree import Forest, compile_predict_raw, predict_naive
 
 
 @dataclass
@@ -34,11 +46,8 @@ class Engine:
 
 
 def _compat_pallas(forest: Forest) -> str | None:
-    if forest.obl_weights is not None and forest.obl_weights.shape[-1] and \
-            (forest.feature == -2).any():
+    if forest.has_oblique():
         return "oblique conditions are not supported by the pallas engine"
-    if forest.max_nodes > 4096:
-        return "node capacity exceeds the pallas engine VMEM budget"
     return None
 
 
@@ -63,35 +72,104 @@ def compile_model(model, engine: str | None = None) -> Engine:
     if engine == "naive":
         return Engine("naive", lambda X: predict_naive(forest, X))
     if engine == "vectorized":
-        return Engine("vectorized", lambda X: predict_raw(forest, X))
+        return Engine("vectorized", compile_predict_raw(forest),
+                      note="specialized flat-table traversal (§5.1)")
     if engine == "pallas":
         reason = _compat_pallas(forest)
         if reason:
             raise YdfError(
                 f"Model is not compatible with the 'pallas' engine: {reason}. "
                 f"Compatible engines: {available_engines(forest)}.")
-        from repro.kernels.forest_infer.ops import forest_predict
+        from repro.kernels.forest_infer.ops import device_packed, forest_predict
+        device_packed(forest)  # upload the depth-packed layout once, now
         return Engine("pallas", lambda X: np.asarray(forest_predict(forest, X)),
-                      note="interpret-mode on CPU; compiled on TPU")
+                      note="tree-tiled over depth-packed blocks (§5.2); "
+                           "interpret-mode on CPU, compiled on TPU")
     raise YdfError(f"Unknown engine {engine!r}. "
                    f"Available: {available_engines(forest)}.")
 
 
+# ------------------------------------------------- compiled predictor (§5.1)
+
+@dataclass
+class CompiledPredictor:
+    """The reusable end-to-end serving artifact (DESIGN.md §5.1).
+
+    Built once per model: ``encoder`` holds the vectorized raw→code tables,
+    ``engine`` the traversal closure (device-resident forest for pallas),
+    ``finalize`` the model's aggregation + activation head. ``predict`` is
+    then a pure batch function with no per-call compilation, conversion, or
+    host↔device forest traffic; ``encode``/``predict_encoded`` split the two
+    halves so a micro-batcher (serving/forest.py, §5.4) can encode per
+    request but dispatch per padded batch.
+    """
+    engine: Engine
+    encoder: BatchEncoder
+    finalize: Callable[[np.ndarray], np.ndarray]
+    compile_s: float = 0.0
+
+    @property
+    def name(self) -> str:
+        return self.engine.name
+
+    def encode(self, dataset) -> np.ndarray:
+        return self.encoder.encode(dataset)
+
+    def per_tree(self, X: np.ndarray) -> np.ndarray:
+        return self.engine.per_tree(X)
+
+    def predict_encoded(self, X: np.ndarray) -> np.ndarray:
+        return self.finalize(np.asarray(self.engine.per_tree(X)))
+
+    def predict(self, dataset) -> np.ndarray:
+        return self.predict_encoded(self.encode(dataset))
+
+
+def compile_predictor(model, engine: str | None = None) -> CompiledPredictor:
+    """Compile ``model`` into a CompiledPredictor. Jit'd engines retrace per
+    batch shape, so shape warmup belongs to the layer that knows the
+    dispatch sizes — serving/forest.py warms at its padding buckets."""
+    t0 = time.perf_counter()
+    eng = compile_model(model, engine)
+    encoder = BatchEncoder(model.spec, model.features)
+    # _compile_finalize returns a closure over the needed fields only — a
+    # bound model method would cycle Model <-> predictor (models.py)
+    return CompiledPredictor(engine=eng, encoder=encoder,
+                             finalize=model._compile_finalize(),
+                             compile_s=time.perf_counter() - t0)
+
+
 def benchmark_inference(model, dataset, *, repetitions: int = 5) -> str:
-    """App. B.4 analogue: time every compatible engine on the dataset."""
+    """App. B.4 analogue: time every compatible engine on the dataset.
+
+    Jit'd engines (pallas) warm up AT THE TIMED SHAPE — they retrace per
+    batch shape, so a 64-row warmup would leave the retrace in the first
+    timed rep — and that warmup is reported separately as compile time. It
+    is an upper bound: the warmup call necessarily executes once after
+    tracing (on TPU, XLA compiles during that first call; in interpret mode
+    on CPU the execution dominates). Non-jit engines have no trace to warm:
+    their compile time is the closure-specialization cost alone, and a
+    tiny-slice warmup just touches the code path.
+    """
     from repro.core.models import _as_vertical, raw_matrix
     ds = _as_vertical(dataset, model.spec)
     X = raw_matrix(ds, model.features)
     lines = ["benchmark_inference (avg over %d reps, batch=%d):"
              % (repetitions, X.shape[0])]
     for name in available_engines(model.forest):
+        t0 = time.perf_counter()
         eng = compile_model(model, name)
-        eng.per_tree(X[:min(64, len(X))])  # warmup / trace
+        if name == "pallas":
+            eng.per_tree(X)          # warmup / trace at the timed shape
+            compile_s = time.perf_counter() - t0
+        else:
+            compile_s = time.perf_counter() - t0
+            eng.per_tree(X[:min(64, len(X))])  # untimed code-path touch
         t0 = time.perf_counter()
         for _ in range(repetitions):
             eng.per_tree(X)
         dt = (time.perf_counter() - t0) / repetitions
         us = dt / max(1, X.shape[0]) * 1e6
         lines.append(f"  {name:<12s} {us:10.3f} us/example  "
-                     f"({dt * 1e3:.2f} ms/batch)")
+                     f"({dt * 1e3:.2f} ms/batch, compile {compile_s * 1e3:.1f} ms)")
     return "\n".join(lines)

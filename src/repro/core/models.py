@@ -143,27 +143,53 @@ class DecisionForestModel(Model):
         self.classes = classes
         self.self_evaluation = self_evaluation
         self._engine = None
+        self._predictor = None
 
-    # -------- engines (§3.7)
+    # -------- engines + compiled predictor (§3.7; DESIGN.md §5.1)
     def compile(self, engine: str | None = None):
-        from repro.core.engines import compile_model
-        self._engine = compile_model(self, engine)
+        """(Re)compile the serving stack: encode tables + engine closure +
+        output head. Returns the selected Engine (back-compat); the full
+        CompiledPredictor is available via ``predictor()``."""
+        from repro.core.engines import compile_predictor
+        self._predictor = compile_predictor(self, engine)
+        self._engine = self._predictor.engine
         return self._engine
 
+    def predictor(self, engine: str | None = None):
+        """The cached CompiledPredictor; compiled on first use and reused by
+        every subsequent ``predict`` call (§5.1 lifecycle)."""
+        if self._predictor is None or \
+                (engine is not None and self._predictor.name != engine):
+            self.compile(engine)
+        return self._predictor
+
     def __getstate__(self):
-        # engines are runtime artifacts (closures over device buffers) and are
-        # recompiled on load — exactly the Model/engine split of §3.7
+        # engines/predictors are runtime artifacts (closures over device
+        # buffers, encode tables) and are recompiled on load — exactly the
+        # Model/engine split of §3.7
         state = dict(self.__dict__)
         state["_engine"] = None
+        state["_predictor"] = None
         return state
 
     def _scores(self, dataset) -> np.ndarray:
-        """(N, T, out_dim) per-tree outputs via the selected engine."""
-        if self._engine is None:
-            self.compile()
-        ds = _as_vertical(dataset, self.spec)
-        X = raw_matrix(ds, self.features)
-        return self._engine.per_tree(X)
+        """(N, T, out_dim) per-tree outputs via the compiled predictor."""
+        p = self.predictor()
+        return np.asarray(p.per_tree(p.encode(dataset)))
+
+    def _finalize(self, per_tree: np.ndarray) -> np.ndarray:
+        """Aggregation + activation head applied to per-tree outputs."""
+        return self._compile_finalize()(per_tree)
+
+    def _compile_finalize(self):
+        """Self-contained finalize closure for the CompiledPredictor: it
+        must capture the fields it needs, NOT ``self`` — a bound method
+        would cycle Model <-> predictor and delay the device-buffer release
+        that the forest cache's weakref finalizer provides."""
+        raise NotImplementedError
+
+    def predict(self, dataset) -> np.ndarray:
+        return self.predictor().predict(dataset)
 
     def summary(self) -> str:
         c = self.forest.node_counts()
@@ -195,10 +221,9 @@ class GradientBoostedTreesModel(DecisionForestModel):
         super().__init__(**kw)
         self.loss = loss
 
-    def predict(self, dataset) -> np.ndarray:
-        per_tree = self._scores(dataset)
-        scores = aggregate_gbt(per_tree, self.forest)
-        return self.loss.activation(scores)
+    def _compile_finalize(self):
+        loss, forest = self.loss, self.forest
+        return lambda per_tree: loss.activation(aggregate_gbt(per_tree, forest))
 
     def predict_scores(self, dataset) -> np.ndarray:
         return aggregate_gbt(self._scores(dataset), self.forest)
@@ -209,13 +234,15 @@ class RandomForestModel(DecisionForestModel):
         super().__init__(**kw)
         self.winner_take_all = winner_take_all
 
-    def predict(self, dataset) -> np.ndarray:
-        per_tree = self._scores(dataset)
-        out = aggregate_rf(per_tree, self.winner_take_all and
-                           self.task == Task.CLASSIFICATION)
-        if self.task == Task.REGRESSION:
-            return out[:, 0]
-        return out
+    def _compile_finalize(self):
+        wta = self.winner_take_all and self.task == Task.CLASSIFICATION
+        regression = self.task == Task.REGRESSION
+
+        def finalize(per_tree: np.ndarray) -> np.ndarray:
+            out = aggregate_rf(per_tree, wta)
+            return out[:, 0] if regression else out
+
+        return finalize
 
 
 class CartModel(RandomForestModel):

@@ -13,6 +13,14 @@ Vectorized inference traverses all (example, tree) pairs in lockstep for
 ``depth`` rounds of gathers — branch-free, the QuickScorer insight restated
 for the VPU/MXU (DESIGN.md §2.2). ``predict_*`` here are the readable
 reference engines; repro/kernels/forest_infer holds the Pallas VMEM engine.
+
+Serving additions (DESIGN.md §5):
+  * ``compile_predict_raw`` — a one-time specialization of ``predict_raw``
+    (flattened node tables, single word-level categorical gather, unused
+    condition kinds removed) that the compiled predictor reuses per batch.
+  * ``pack_by_depth`` — the depth-packed SoA layout (§5.3): trees sorted by
+    depth and grouped into fixed-size blocks, so the tree-tiled kernel pays
+    max-depth-per-block rather than global max depth on ragged forests.
 """
 from __future__ import annotations
 
@@ -51,6 +59,12 @@ class Forest:
     @property
     def max_nodes(self) -> int:
         return self.feature.shape[1]
+
+    def has_oblique(self) -> bool:
+        """True when any live node carries a sparse-oblique condition (the
+        single source of truth for engine-compatibility checks)."""
+        return bool(self.obl_weights is not None and self.obl_weights.shape[-1]
+                    and (self.feature == -2).any())
 
     def truncated(self, n_trees: int) -> "Forest":
         sl = lambda a: None if a is None else a[:n_trees]
@@ -175,7 +189,7 @@ def predict_raw(forest: Forest, X: np.ndarray) -> np.ndarray:
 def predict_naive(forest: Forest, X: np.ndarray) -> np.ndarray:
     """Algorithm 1 of the paper: per-example while-loop. The readable oracle."""
     N = X.shape[0]
-    out = np.zeros((N, forest.n_trees, forest.out_dim), np.float32)
+    out = np.zeros((N, forest.n_trees, forest.leaf_value.shape[-1]), np.float32)
     for n in range(N):
         for t in range(forest.n_trees):
             node = 0
@@ -194,6 +208,173 @@ def predict_naive(forest: Forest, X: np.ndarray) -> np.ndarray:
                 node = forest.left_child[t, node] + int(go)
             out[n, t] = forest.leaf_value[t, node]
     return out
+
+
+def compile_predict_raw(forest: Forest):
+    """One-time specialization of ``predict_raw`` for serving (DESIGN.md §5.1).
+
+    Compared to the generic lockstep traversal, compilation:
+      * flattens the (T, M) node tables once, so every round reuses a single
+        (N, T) flat index for the feature/threshold/child gathers instead of
+        rebuilding advanced-index pairs;
+      * gathers only the addressed 32-bit mask word per categorical test
+        (the generic path materializes the full (N, T, MASK_WORDS) block);
+      * drops condition kinds the forest does not use — a pure-numerical
+        forest pays nothing for the categorical path (lossy-compilation
+        specialization, §3.7).
+
+    Oblique forests fall back to the generic traversal (still a valid
+    compiled predictor; the specialization simply does not apply).
+    Returns ``run(X: (N, F) float32) -> (N, T, out_dim) float32``.
+    """
+    if forest.has_oblique():
+        return lambda X: predict_raw(forest, X)
+    T, M = forest.n_trees, forest.max_nodes
+    depth = max(1, forest.depth)
+    feat_flat = np.ascontiguousarray(forest.feature.ravel())
+    thr_flat = np.ascontiguousarray(forest.threshold.ravel())
+    lc_flat = np.ascontiguousarray(forest.left_child.ravel())
+    # trailing leaf dim can differ from out_dim (GBT multiclass stores
+    # scalar leaves + a tree->class map)
+    leaf_flat = np.ascontiguousarray(
+        forest.leaf_value.reshape(T * M, forest.leaf_value.shape[-1]))
+    off = (np.arange(T, dtype=np.int64) * M)[None, :]          # (1, T)
+    has_cat = bool(forest.cat_mask.any())
+    if has_cat:
+        is_cat_flat = forest.cat_mask.any(-1).ravel()
+        catw_flat = np.ascontiguousarray(forest.cat_mask.ravel())  # (T*M*W,)
+
+    def run(X: np.ndarray) -> np.ndarray:
+        N = X.shape[0]
+        rows = np.arange(N)[:, None]
+        node = np.zeros((N, T), np.int64)
+        for _ in range(depth):
+            idx = node + off                                   # (N, T) flat
+            f = feat_flat[idx]
+            x = X[rows, np.maximum(f, 0)]                      # (N, T)
+            go = x >= thr_flat[idx]
+            if has_cat:
+                code = np.clip(x.astype(np.int64), 0, MASK_WORDS * 32 - 1)
+                word = catw_flat[idx * MASK_WORDS + (code >> 5)]
+                bit = (word >> (code & 31).astype(np.uint32)) & 1
+                go = np.where(is_cat_flat[idx], bit.astype(bool), go)
+            lc = lc_flat[idx]
+            node = np.where(lc >= 0, lc + go, node)
+        return leaf_flat[node + off]                           # (N, T, O)
+
+    return run
+
+
+# ------------------------------------------------- depth-packed layout (§5.3)
+
+def tree_depths(forest: Forest) -> np.ndarray:
+    """Per-tree depth, (T,) int32, by level-order frontier propagation: each
+    pass expands every frontier node of every tree at once, so the cost is
+    O(depth) vectorized passes over O(total nodes) work — flat host time
+    even for the arbitrarily-large forests the tiled kernel accepts."""
+    T = forest.n_trees
+    depths = np.zeros(T, np.int32)
+    if T == 0:
+        return depths
+    cur_t = np.arange(T, dtype=np.int64)   # frontier (tree, node) pairs
+    cur_n = np.zeros(T, np.int64)
+    level = 0
+    while cur_t.size:
+        lc = forest.left_child[cur_t, cur_n]
+        m = lc >= 0
+        if not m.any():
+            break
+        level += 1
+        ct, cl = cur_t[m], lc[m]
+        depths[ct] = level                  # deepest level seen so far wins
+        cur_t = np.concatenate([ct, ct])
+        cur_n = np.concatenate([cl, cl + 1])
+    return depths
+
+
+@dataclass
+class PackedForest:
+    """Depth-packed SoA (DESIGN.md §5.3): trees sorted by depth, grouped into
+    ``n_blocks`` blocks of ``trees_per_block``, node capacity trimmed to the
+    forest's live node count (padded to ``node_tile``). ``block_depth`` lets
+    the tree-tiled kernel (§5.2) bound its traversal loop per block, and
+    ``inv_order`` restores the original tree order after the kernel."""
+    feature: np.ndarray      # (B, TB, M) int32
+    threshold: np.ndarray    # (B, TB, M) float32
+    cat_mask: np.ndarray     # (B, TB, M, MASK_WORDS) uint32
+    left_child: np.ndarray   # (B, TB, M) int32
+    leaf_value: np.ndarray   # (B, TB, M, out_dim) float32
+    block_depth: np.ndarray  # (B, 1) int32: max tree depth within the block
+    inv_order: np.ndarray    # (T,) int32: original tree t lives at packed
+                             # slot inv_order[t] (flat over (B, TB))
+    n_trees: int             # original T (packed slots beyond are padding)
+    out_dim: int             # trailing leaf dim (1 for GBT multiclass)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.feature.shape[0]
+
+    @property
+    def trees_per_block(self) -> int:
+        return self.feature.shape[1]
+
+    @property
+    def max_nodes(self) -> int:
+        return self.feature.shape[2]
+
+
+def pack_by_depth(forest: Forest, *, trees_per_block: int | None = None,
+                  node_tile: int = 128,
+                  vmem_budget_bytes: int = 4 * 1024 * 1024) -> PackedForest:
+    """Pack a Forest for the tree-tiled kernel (DESIGN.md §5.2–§5.3).
+
+    Trees are sorted by depth so each block is depth-homogeneous; the kernel
+    runs ``block_depth[b]`` traversal rounds instead of the global max.
+    ``trees_per_block`` defaults to as many trees as fit the per-step VMEM
+    budget given the trimmed node capacity — large-node forests degrade to
+    one tree per block rather than refusing to compile (this is what removes
+    the old 4096-node ceiling)."""
+    T = forest.n_trees
+    O = forest.leaf_value.shape[-1]
+    depths = tree_depths(forest)
+    # trim capacity to live nodes, pad to the kernel's node tile
+    live = int(forest.n_nodes.max()) if T else 1
+    M = max(node_tile, -(-live // node_tile) * node_tile)
+    # feat/thr/lc f32 + cat mask as TWO f32 half-word arrays in-kernel + leaf
+    bytes_per_tree = M * (4 * 3 + 2 * 4 * MASK_WORDS + 4 * O)
+    if trees_per_block is None:
+        trees_per_block = int(max(1, min(8, vmem_budget_bytes // max(1, bytes_per_tree))))
+    TB = min(trees_per_block, max(1, T))
+    order = np.argsort(depths, kind="stable").astype(np.int32)  # slot -> tree
+    B = -(-max(1, T) // TB)
+    S = B * TB
+
+    def take(a, fill=0):
+        # (T, M_old, ...) -> (B, TB, M, ...) in sorted order, padded trees
+        out_shape = (S, M) + a.shape[2:]
+        out = np.full(out_shape, fill, a.dtype)
+        if T:
+            m = min(M, a.shape[1])
+            out[:T, :m] = a[order][:, :m]
+        return out.reshape((B, TB) + out_shape[1:])
+
+    feature = take(forest.feature, -1)
+    left_child = take(forest.left_child, -1)
+    threshold = take(forest.threshold)
+    cat_mask = take(forest.cat_mask)
+    leaf_value = take(forest.leaf_value)
+    block_depth = np.zeros((B, 1), np.int32)
+    if T:
+        sorted_d = np.zeros(S, np.int32)
+        sorted_d[:T] = depths[order]
+        block_depth[:, 0] = np.maximum(
+            sorted_d.reshape(B, TB).max(axis=1), 1)
+    inv_order = np.empty(T, np.int32)
+    inv_order[order] = np.arange(T, dtype=np.int32)
+    return PackedForest(feature=feature, threshold=threshold, cat_mask=cat_mask,
+                        left_child=left_child, leaf_value=leaf_value,
+                        block_depth=block_depth, inv_order=inv_order,
+                        n_trees=T, out_dim=O)
 
 
 # ------------------------------------------------------------ aggregation

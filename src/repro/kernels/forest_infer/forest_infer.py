@@ -13,6 +13,22 @@ trees), which the MXU executes at full tilt — no gathers, no branches:
 
 Grid: (N // TN, T). Per step: X tile (TN, F) + one tree's arrays in VMEM.
 VMEM at TN=256, F<=512, M<=512: X 512KB + onehot 512KB + tree ~20KB.
+
+Two kernels live here (DESIGN.md §5.2):
+
+  * ``forest_predict_pallas`` — the small-forest specialization above: one
+    tree per grid step, whole node table addressed by a single (TN, M)
+    one-hot. The (TN, M) intermediate caps M at the VMEM budget.
+  * ``forest_predict_pallas_tiled`` — the serving kernel. Grid is
+    (example_tile, tree_block) over a depth-packed forest
+    (``core.tree.pack_by_depth``): each step holds a *block* of trees and
+    the per-round one-hot is tiled over node chunks of ``node_tile``, so
+    arbitrarily large node tables compile — the per-step VMEM high-water is
+    (TN, node_tile) plus the block's (trimmed) tree arrays, independent of
+    total forest size. The traversal loop is a ``fori_loop`` bounded by the
+    *block's* max depth (§5.3): ragged forests pay max-depth-per-block, not
+    global max depth. Categorical mask words travel as exact 16-bit halves
+    (float32 carries < 2^24 exactly) instead of lossy whole-word floats.
 """
 from __future__ import annotations
 
@@ -21,8 +37,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 MASK_WORDS = 8
+
+# Gather matmuls carry INTEGER payloads (node ids, child indices, 16-bit
+# mask halves) through float32: the MXU's default precision would round
+# inputs to bfloat16 (exact only to 256) and silently corrupt traversal —
+# pin the highest precision so f32 operands survive intact.
+_dot = functools.partial(jnp.dot, precision=jax.lax.Precision.HIGHEST,
+                         preferred_element_type=jnp.float32)
 
 
 def _infer_kernel(x_ref, feat_ref, thr_ref, cat_ref, lc_ref, leaf_ref, out_ref,
@@ -42,16 +66,16 @@ def _infer_kernel(x_ref, feat_ref, thr_ref, cat_ref, lc_ref, leaf_ref, out_ref,
     for _ in range(max(1, depth)):
         m_iota = jax.lax.broadcasted_iota(jnp.float32, (TN, M), 1)
         oh = (node[:, None] == m_iota).astype(jnp.float32)        # (TN, M)
-        f = oh @ feat                                             # (TN,)
-        t = oh @ thr
-        l = oh @ lc
-        is_cat = oh @ has_cat
+        f = _dot(oh, feat)                                        # (TN,)
+        t = _dot(oh, thr)
+        l = _dot(oh, lc)
+        is_cat = _dot(oh, has_cat)
         f_iota = jax.lax.broadcasted_iota(jnp.float32, (TN, F), 1)
         x_oh = (jnp.maximum(f, 0.0)[:, None] == f_iota).astype(jnp.float32)
         x = jnp.sum(X * x_oh, axis=1)                             # (TN,)
         go_num = (x >= t).astype(jnp.float32)
         # categorical bit test: word/bit via one-hot over mask words
-        words = oh @ cat                                          # (TN, W)
+        words = _dot(oh, cat)                                     # (TN, W)
         code = jnp.clip(x, 0.0, MASK_WORDS * 32 - 1).astype(jnp.int32)
         w_iota = jax.lax.broadcasted_iota(jnp.int32, (TN, MASK_WORDS), 1)
         w_oh = ((code[:, None] // 32) == w_iota).astype(jnp.float32)
@@ -63,7 +87,7 @@ def _infer_kernel(x_ref, feat_ref, thr_ref, cat_ref, lc_ref, leaf_ref, out_ref,
 
     m_iota = jax.lax.broadcasted_iota(jnp.float32, (TN, M), 1)
     oh = (node[:, None] == m_iota).astype(jnp.float32)
-    out_ref[:, 0, :] = oh @ leaf                                  # (TN, O)
+    out_ref[:, 0, :] = _dot(oh, leaf)                             # (TN, O)
 
 
 @functools.partial(jax.jit, static_argnames=("depth", "tile_n", "interpret"))
@@ -96,4 +120,120 @@ def forest_predict_pallas(X, feature, threshold, cat_mask, left_child,
         interpret=interpret,
     )(X.astype(jnp.float32), feature, threshold.astype(jnp.float32),
       cat_mask, left_child, leaf_value.astype(jnp.float32))
+    return out[:N]
+
+
+# ===================================================================== §5.2
+# Tree-tiled serving kernel: grid (example_tile, tree_block), node-chunked
+# one-hots, per-block depth bound. Inputs come from core.tree.pack_by_depth.
+# =========================================================================
+
+def _infer_tiled_kernel(depth_ref, x_ref, feat_ref, thr_ref, cat_lo_ref,
+                        cat_hi_ref, lc_ref, leaf_ref, out_ref, *,
+                        node_tile: int):
+    X = x_ref[...]                                    # (TN, F)
+    TN, F = X.shape
+    TB, M = feat_ref.shape[1], feat_ref.shape[2]
+    n_tiles = M // node_tile
+    d = depth_ref[0, 0]                               # this block's max depth
+    f_iota = jax.lax.broadcasted_iota(jnp.float32, (TN, F), 1)
+    mt_iota = jax.lax.broadcasted_iota(jnp.float32, (TN, node_tile), 1)
+    w_iota = jax.lax.broadcasted_iota(jnp.int32, (TN, MASK_WORDS), 1)
+
+    for j in range(TB):
+        feat = feat_ref[0, j].astype(jnp.float32)     # (M,)
+        thr = thr_ref[0, j]                           # (M,)
+        lo = cat_lo_ref[0, j]                         # (M, W) f32, low 16 bits
+        hi = cat_hi_ref[0, j]                         # (M, W) f32, high 16 bits
+        lc = lc_ref[0, j].astype(jnp.float32)         # (M,)
+        leaf = leaf_ref[0, j]                         # (M, O)
+        has_cat = ((lo + hi).sum(-1) > 0).astype(jnp.float32)  # (M,)
+
+        def chunk_oh(node, k):
+            # one-hot over node chunk k — zero for nodes outside the chunk,
+            # so summing chunk matmuls reconstructs the full-table gather
+            return (node[:, None] == mt_iota + k * node_tile).astype(jnp.float32)
+
+        def round_body(_, node):
+            f = t = l = ic = jnp.zeros((TN,), jnp.float32)
+            wlo = whi = jnp.zeros((TN, MASK_WORDS), jnp.float32)
+            for k in range(n_tiles):
+                oh = chunk_oh(node, k)                # (TN, node_tile)
+                sl = slice(k * node_tile, (k + 1) * node_tile)
+                f = f + _dot(oh, feat[sl])
+                t = t + _dot(oh, thr[sl])
+                l = l + _dot(oh, lc[sl])
+                ic = ic + _dot(oh, has_cat[sl])
+                wlo = wlo + _dot(oh, lo[sl])
+                whi = whi + _dot(oh, hi[sl])
+            x_oh = (jnp.maximum(f, 0.0)[:, None] == f_iota).astype(jnp.float32)
+            x = jnp.sum(X * x_oh, axis=1)             # (TN,)
+            go_num = (x >= t).astype(jnp.float32)
+            code = jnp.clip(x, 0.0, MASK_WORDS * 32 - 1).astype(jnp.int32)
+            w_oh = ((code[:, None] // 32) == w_iota).astype(jnp.float32)
+            word = jnp.sum(wlo * w_oh, axis=1).astype(jnp.uint32) | \
+                (jnp.sum(whi * w_oh, axis=1).astype(jnp.uint32) << 16)
+            bit = ((word >> (code % 32).astype(jnp.uint32)) & 1).astype(jnp.float32)
+            go = jnp.where(ic > 0, bit, go_num)
+            nxt = l + go
+            return jnp.where(l >= 0, nxt, node)
+
+        node = jax.lax.fori_loop(0, d, round_body,
+                                 jnp.zeros((TN,), jnp.float32))
+        acc = jnp.zeros((TN, leaf.shape[-1]), jnp.float32)
+        for k in range(n_tiles):
+            sl = slice(k * node_tile, (k + 1) * node_tile)
+            acc = acc + _dot(chunk_oh(node, k), leaf[sl])
+        out_ref[:, j, :] = acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("node_tile", "tile_n", "interpret"))
+def forest_predict_pallas_tiled(X, feature, threshold, cat_mask, left_child,
+                                leaf_value, block_depth, node_tile: int = 128,
+                                tile_n: int = 256, interpret: bool = False):
+    """Tree-tiled lockstep traversal over a depth-packed forest (§5.2).
+
+    X: (N, F) f32; feature/left_child: (B, TB, M) i32; threshold (B, TB, M)
+    f32; cat_mask (B, TB, M, W) u32; leaf_value (B, TB, M, O) f32;
+    block_depth (B, 1) i32. M must be a multiple of ``node_tile``
+    (``pack_by_depth`` guarantees it). -> (N, B*TB, O) in *packed* tree
+    order; callers restore the original order with PackedForest.inv_order.
+    """
+    N, F = X.shape
+    B, TB, M = feature.shape
+    O = leaf_value.shape[-1]
+    mt = min(node_tile, M)
+    if M % mt:
+        raise ValueError(f"node capacity {M} is not a multiple of the node "
+                         f"tile {mt}; pack the forest with pack_by_depth")
+    TN = min(tile_n, N) if N else tile_n
+    pad = (-N) % TN
+    if pad:
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+    Np = N + pad
+    # exact 16-bit halves: a float32 one-hot matmul carries < 2^24 losslessly
+    cat_lo = (cat_mask & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    cat_hi = (cat_mask >> jnp.uint32(16)).astype(jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_infer_tiled_kernel, node_tile=mt),
+        grid=(Np // TN, B),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, b: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((TN, F), lambda i, b: (i, 0)),
+            pl.BlockSpec((1, TB, M), lambda i, b: (b, 0, 0)),
+            pl.BlockSpec((1, TB, M), lambda i, b: (b, 0, 0)),
+            pl.BlockSpec((1, TB, M, MASK_WORDS), lambda i, b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, TB, M, MASK_WORDS), lambda i, b: (b, 0, 0, 0)),
+            pl.BlockSpec((1, TB, M), lambda i, b: (b, 0, 0)),
+            pl.BlockSpec((1, TB, M, O), lambda i, b: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TN, TB, O), lambda i, b: (i, b, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, B * TB, O), jnp.float32),
+        interpret=interpret,
+    )(block_depth, X.astype(jnp.float32), feature,
+      threshold.astype(jnp.float32), cat_lo, cat_hi, left_child,
+      leaf_value.astype(jnp.float32))
     return out[:N]

@@ -1,28 +1,98 @@
-"""jit'd wrapper: Forest SoA -> device arrays -> kernel dispatch."""
+"""Dispatch + per-forest device caches for the inference kernels.
+
+The serving contract (DESIGN.md §5.1) is that a compiled forest is uploaded
+to the device ONCE: ``forest_predict`` keeps a small id-keyed cache mapping a
+live Forest to (a) its raw SoA device arrays (ref kernel) and (b) its
+depth-packed device layout (tiled kernel, §5.2–§5.3), so repeat predictions
+do zero host-to-device transfers and zero re-packing. Entries are validated
+against a weakref (id reuse after GC cannot alias) and evicted LRU.
+
+impls: "pallas" (tiled, compiled), "interpret" (tiled, interpret mode —
+the CPU correctness path), "ref" (jnp gather oracle), "pallas_single"
+(legacy one-tree-per-step kernel; node capacity must fit its VMEM budget).
+"""
 from __future__ import annotations
+
+import weakref
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.forest_infer.forest_infer import forest_predict_pallas
+from repro.kernels.forest_infer.forest_infer import (
+    forest_predict_pallas,
+    forest_predict_pallas_tiled,
+)
 from repro.kernels.forest_infer.ref import forest_predict_ref
+
+_CACHE: "OrderedDict[int, tuple]" = OrderedDict()
+_CACHE_CAP = 8
+
+
+def _forest_cache(forest) -> dict:
+    """Per-forest payload dict, id-keyed + weakref-validated, LRU-capped.
+    A weakref finalizer evicts the entry the moment the forest is GC'd, so
+    a retired model's device buffers free immediately instead of lingering
+    until LRU pressure pushes them out."""
+    key = id(forest)
+    ent = _CACHE.get(key)
+    if ent is not None and ent[0]() is forest:
+        _CACHE.move_to_end(key)
+        return ent[1]
+    payload: dict = {}
+
+    def _evict(_ref, key=key):
+        _CACHE.pop(key, None)
+
+    _CACHE[key] = (weakref.ref(forest, _evict), payload)
+    _CACHE.move_to_end(key)
+    while len(_CACHE) > _CACHE_CAP:
+        _CACHE.popitem(last=False)
+    return payload
+
+
+def device_soa(forest) -> tuple:
+    """Raw Forest SoA as device arrays, uploaded once per forest."""
+    c = _forest_cache(forest)
+    if "soa" not in c:
+        c["soa"] = (jnp.asarray(forest.feature), jnp.asarray(forest.threshold),
+                    jnp.asarray(forest.cat_mask),
+                    jnp.asarray(forest.left_child),
+                    jnp.asarray(forest.leaf_value))
+    return c["soa"]
+
+
+def device_packed(forest) -> tuple:
+    """Depth-packed device layout (pack_by_depth output), built/uploaded once.
+    Returns (feature, threshold, cat_mask, left_child, leaf_value,
+    block_depth, inv_order) with the first six on device."""
+    c = _forest_cache(forest)
+    if "packed" not in c:
+        from repro.core.tree import pack_by_depth
+        p = pack_by_depth(forest)
+        c["packed"] = (jnp.asarray(p.feature), jnp.asarray(p.threshold),
+                       jnp.asarray(p.cat_mask), jnp.asarray(p.left_child),
+                       jnp.asarray(p.leaf_value), jnp.asarray(p.block_depth),
+                       jnp.asarray(p.inv_order))
+    return c["packed"]
 
 
 def forest_predict(forest, X: np.ndarray, impl: str | None = None):
     """forest: repro.core.tree.Forest; X: (N, F) raw-value matrix.
-    -> (N, T, out_dim) per-tree outputs."""
+    -> (N, T, out_dim) per-tree outputs (original tree order)."""
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
-    args = (jnp.asarray(X, jnp.float32),
-            jnp.asarray(forest.feature), jnp.asarray(forest.threshold),
-            jnp.asarray(forest.cat_mask), jnp.asarray(forest.left_child),
-            jnp.asarray(forest.leaf_value))
+    Xd = jnp.asarray(X, jnp.float32)
     depth = int(max(1, forest.depth))
     if impl == "ref":
-        return forest_predict_ref(*args, depth=depth)
-    if impl == "pallas":
-        return forest_predict_pallas(*args, depth=depth)
-    if impl == "interpret":
-        return forest_predict_pallas(*args, depth=depth, interpret=True)
+        return forest_predict_ref(Xd, *device_soa(forest), depth=depth)
+    if impl == "pallas_single":
+        return forest_predict_pallas(Xd, *device_soa(forest), depth=depth)
+    if impl in ("pallas", "interpret"):
+        feat, thr, cat, lc, leaf, bd, inv = device_packed(forest)
+        out = forest_predict_pallas_tiled(
+            Xd, feat, thr, cat, lc, leaf, bd,
+            interpret=(impl == "interpret"))
+        return jnp.take(out, inv, axis=1)
     raise ValueError(f"unknown impl {impl!r}")

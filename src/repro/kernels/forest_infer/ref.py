@@ -4,6 +4,11 @@ Semantics match repro.core.tree.predict_raw on the SoA forest layout:
 numerical 'x >= threshold', categorical bit-mask test (mask non-empty), depth
 rounds of traversal, leaves self-loop. Oblique nodes are NOT supported here
 (the engine layer routes oblique models elsewhere — lossy compilation, §3.7).
+
+This is the simple-module ground truth (§2.3) for BOTH pallas kernels in
+forest_infer.py — the small-forest one-tree-per-step kernel and the
+tree-tiled serving kernel (DESIGN.md §5.2); it consumes the raw (T, M) SoA,
+not the depth-packed layout, so packing/unpacking is under test too.
 """
 from __future__ import annotations
 

@@ -4,3 +4,8 @@ from repro.serving.decode import (  # noqa: F401
     make_prefill,
     serve_state_specs,
 )
+from repro.serving.forest import (  # noqa: F401
+    ForestServeBundle,
+    MicroBatcher,
+    make_forest_server,
+)

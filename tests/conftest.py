@@ -11,3 +11,45 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def _make_random_forest(n_trees, n_splits_list, n_features, out_dim=1,
+                        seed=0, cat_feats=()):
+    """Synthetic valid Forest (random leaf-splitting order): n_splits_list
+    cycles per tree, so mixed entries build ragged-depth forests; entries
+    over 2048 build >4096-node trees. cat_feats get random category masks."""
+    from repro.core.tree import empty_forest
+
+    M = 2 * max(n_splits_list) + 1
+    f = empty_forest(n_trees, M, out_dim)
+    rng = np.random.default_rng(seed)
+    maxd = 0
+    for t in range(n_trees):
+        leaves = [(0, 0)]
+        n_nodes = 1
+        for _ in range(n_splits_list[t % len(n_splits_list)]):
+            node, d = leaves.pop(int(rng.integers(len(leaves))))
+            j = int(rng.integers(n_features))
+            f.feature[t, node] = j
+            if j in cat_feats:
+                mask = rng.integers(0, 2 ** 32, size=f.cat_mask.shape[-1],
+                                    dtype=np.uint64).astype(np.uint32)
+                mask[0] |= 1  # never empty: empty mask means numerical
+                f.cat_mask[t, node] = mask
+            else:
+                f.threshold[t, node] = rng.normal()
+            f.left_child[t, node] = n_nodes
+            f.leaf_value[t, n_nodes] = rng.normal(size=out_dim)
+            f.leaf_value[t, n_nodes + 1] = rng.normal(size=out_dim)
+            leaves += [(n_nodes, d + 1), (n_nodes + 1, d + 1)]
+            n_nodes += 2
+            maxd = max(maxd, d + 1)
+        f.n_nodes[t] = n_nodes
+    f.depth = maxd
+    f.feature_names = [f"f{j}" for j in range(n_features)]
+    return f
+
+
+@pytest.fixture(scope="session")
+def random_forest_factory():
+    return _make_random_forest

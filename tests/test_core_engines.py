@@ -53,6 +53,75 @@ def test_benchmark_inference_report(trained):
     _, test = train_test_split(adult_like(400), 0.5, 1)
     rep = benchmark_inference(gbt, test, repetitions=1)
     assert "us/example" in rep and "vectorized" in rep
+    # per-engine compile time is reported separately (warmup at timed shape)
+    assert "compile" in rep
+
+
+# ---------------------------------------------------------------- §5 matrix
+
+class _Holder:
+    """Minimal model stand-in for compile_model on synthetic forests."""
+    def __init__(self, forest):
+        self.forest = forest
+
+
+def _assert_engines_agree(forest, X, atol=1e-5, naive_rows=None):
+    from repro.core.tree import predict_naive
+    model = _Holder(forest)
+    assert available_engines(forest) == ["pallas", "vectorized", "naive"]
+    outs = {name: np.asarray(compile_model(model, name).per_tree(X))
+            for name in ("vectorized", "pallas")}
+    for name, o in outs.items():
+        assert o.shape == (len(X), forest.n_trees, forest.leaf_value.shape[-1])
+    np.testing.assert_allclose(outs["pallas"], outs["vectorized"], atol=atol,
+                               err_msg="pallas vs vectorized")
+    nr = len(X) if naive_rows is None else min(naive_rows, len(X))
+    np.testing.assert_allclose(outs["vectorized"][:nr],
+                               predict_naive(forest, X[:nr]), atol=atol,
+                               err_msg="vectorized vs naive")
+
+
+def test_engine_matrix_categorical(trained):
+    gbt, rf, X = trained
+    for model in (gbt, rf):
+        _assert_engines_agree(model.forest, X[:40].astype(np.float32))
+
+
+def test_engine_matrix_ragged_depth(random_forest_factory):
+    forest = random_forest_factory(6, [2, 20, 90], 5, out_dim=2, seed=3)
+    from repro.core.tree import tree_depths
+    d = tree_depths(forest)
+    assert d.max() > 3 * max(1, d.min())  # genuinely ragged
+    X = np.abs(np.random.default_rng(0).normal(size=(33, 5))) \
+        .astype(np.float32) * 3
+    _assert_engines_agree(forest, X)
+
+
+def test_engine_matrix_multiclass():
+    from repro.data.tabular import SUITE, make_dataset
+    train, test = train_test_split(make_dataset(SUITE[0]), 0.3, 1)  # 3 classes
+    gbt = GradientBoostedTreesLearner(label="label", num_trees=9).train(train)
+    rf = RandomForestLearner(label="label", num_trees=4, max_depth=6).train(train)
+    assert gbt.forest.out_dim == 3 and rf.forest.leaf_value.shape[-1] == 3
+    ds = M._as_vertical(test, gbt.spec)
+    for model in (gbt, rf):
+        X = M.raw_matrix(ds, model.features)[:30]
+        _assert_engines_agree(model.forest, X)
+        p = model.predict(test)
+        assert p.shape == (ds.n_rows, 3)
+        np.testing.assert_allclose(p.sum(-1), 1.0, atol=1e-5)
+
+
+def test_large_forest_compiles_on_pallas(random_forest_factory):
+    """Regression: >4096-node forests used to raise 'VMEM budget' on the
+    pallas engine; the tree-tiled kernel (DESIGN.md §5.2) compiles them."""
+    forest = random_forest_factory(2, [2300], 4, seed=5, cat_feats=(2,))
+    assert forest.max_nodes > 4096
+    assert "pallas" in available_engines(forest)
+    X = np.abs(np.random.default_rng(1).normal(size=(16, 4))) \
+        .astype(np.float32) * 3
+    X[:, 2] = np.random.default_rng(2).integers(0, 256, size=16)
+    _assert_engines_agree(forest, X, naive_rows=3)
 
 
 # hypothesis shape/dtype sweeps for the kernels live in

@@ -1,0 +1,158 @@
+"""The compiled serving stack (DESIGN.md §5): encode tables, predictor
+lifecycle, depth-packing, micro-batching, and the inference benchmark."""
+import pickle
+
+import numpy as np
+import pytest
+
+import repro.core.models as M
+from repro.core import GradientBoostedTreesLearner, RandomForestLearner, YdfError
+from repro.core.dataspec import BatchEncoder
+from repro.data.tabular import adult_like, train_test_split
+from repro.serving.forest import ForestServeBundle, MicroBatcher, make_forest_server
+
+
+@pytest.fixture(scope="module")
+def trained():
+    train, test = train_test_split(adult_like(900), 0.3, 1)
+    gbt = GradientBoostedTreesLearner(label="income", num_trees=6).train(train)
+    rf = RandomForestLearner(label="income", num_trees=4, max_depth=6).train(train)
+    return gbt, rf, test
+
+
+# ------------------------------------------------------------- encode (§5.1)
+
+def test_batch_encoder_matches_per_call_path(trained):
+    gbt, _, test = trained
+    enc = BatchEncoder(gbt.spec, gbt.features)
+    # inject unseen categories and missing values into a feature-only batch
+    batch = {k: v.copy() for k, v in test.items() if k != "income"}
+    batch["occupation"][3] = "Astronaut"     # out-of-dictionary -> code 0
+    batch["occupation"][4] = None            # missing -> most-frequent code
+    batch["age"][5] = None                   # missing numerical -> mean
+    batch["age"][6] = "nan"
+    ref_input = dict(batch)
+    ref_input["income"] = test["income"]     # seed path needs all columns
+    want = M.raw_matrix(M._as_vertical(ref_input, gbt.spec), gbt.features)
+    got = enc.encode(batch)
+    np.testing.assert_array_equal(got, want)
+    # VerticalDataset input routes through raw_matrix unchanged
+    ds = M._as_vertical(ref_input, gbt.spec)
+    np.testing.assert_array_equal(enc.encode(ds), want)
+
+
+def test_batch_encoder_reports_missing_columns(trained):
+    gbt, _, test = trained
+    enc = BatchEncoder(gbt.spec, gbt.features)
+    with pytest.raises(YdfError, match="age"):
+        enc.encode({k: v for k, v in test.items() if k not in ("age", "income")})
+
+
+# -------------------------------------------------- predictor lifecycle (§5.1)
+
+def test_predictor_is_cached_and_matches_predict(trained):
+    for model in trained[:2]:
+        test = trained[2]
+        p = model.predictor()
+        assert model.predictor() is p          # cached and reused
+        direct = model.predict(test)
+        np.testing.assert_allclose(p.predict(test), direct, atol=0)
+        # label-free serving batches work (the per-call path required it)
+        features_only = {k: v for k, v in test.items() if k != "income"}
+        np.testing.assert_allclose(model.predict(features_only), direct, atol=0)
+
+
+def test_predictor_engine_switch_and_equivalence(trained):
+    gbt, _, test = trained
+    base = gbt.predictor("vectorized").predict(test)
+    pal = gbt.predictor("pallas")
+    assert pal.name == "pallas"
+    np.testing.assert_allclose(pal.predict(test), base, atol=1e-5)
+
+
+def test_predictor_not_pickled(trained):
+    gbt, _, test = trained
+    gbt.predict(test)  # force-compile
+    clone = pickle.loads(pickle.dumps(gbt))
+    assert clone._predictor is None and clone._engine is None
+    np.testing.assert_allclose(clone.predict(test), gbt.predict(test), atol=0)
+
+
+# ---------------------------------------------------------- depth-pack (§5.3)
+
+def test_pack_by_depth_invariants(random_forest_factory):
+    from repro.core.tree import pack_by_depth, tree_depths
+    forest = random_forest_factory(7, [2, 30, 150], 6, out_dim=2, seed=11)
+    p = pack_by_depth(forest)
+    assert p.max_nodes % 128 == 0
+    assert p.n_blocks * p.trees_per_block >= forest.n_trees
+    assert sorted(p.inv_order.tolist()) == list(range(forest.n_trees))
+    # packed slots are depth-sorted: each block's bound covers its trees
+    d = tree_depths(forest)
+    slot_depth = np.zeros(p.n_blocks * p.trees_per_block, np.int32)
+    slot_depth[p.inv_order] = d
+    per_block = slot_depth.reshape(p.n_blocks, p.trees_per_block).max(1)
+    assert (per_block <= p.block_depth[:, 0]).all()
+
+
+# -------------------------------------------------------- micro-batch (§5.4)
+
+def test_bundle_bucket_padding(trained):
+    gbt, _, test = trained
+    bundle = make_forest_server(gbt, buckets=(8, 32), warmup=False)
+    assert bundle.bucket_for(3) == 8
+    assert bundle.bucket_for(33) == 64   # multiples of the top bucket
+    sub = {k: v[:13] for k, v in test.items()}
+    np.testing.assert_allclose(bundle.predict(sub), gbt.predict(sub), atol=0)
+
+
+def test_micro_batcher_accumulates_pads_dispatches(trained):
+    gbt, _, test = trained
+    bundle = make_forest_server(gbt, buckets=(16, 64), warmup=False)
+    mb = MicroBatcher(bundle, max_batch=16)
+    sizes = [5, 7, 20]
+    reqs = [{k: v[sum(sizes[:i]):sum(sizes[:i + 1])] for k, v in test.items()
+             if k != "income"} for i in range(len(sizes))]
+    t0 = mb.submit(reqs[0])
+    t1 = mb.submit(reqs[1])
+    assert mb.dispatches == 0 and mb.pending_rows() == 12
+    t2 = mb.submit(reqs[2])                 # 32 rows >= max_batch -> flush
+    assert mb.dispatches == 1 and mb.pending_rows() == 0
+    assert mb.rows_dispatched == 32 and mb.rows_padded == 32  # bucket 64
+    for t, req in zip((t0, t1, t2), reqs):
+        np.testing.assert_allclose(mb.result(t), gbt.predict(req), atol=0)
+    # result() on a pending ticket flushes on demand (no deadlock)
+    t3 = mb.submit(reqs[0])
+    np.testing.assert_allclose(mb.result(t3), gbt.predict(reqs[0]), atol=0)
+    assert mb.dispatches == 2
+    with pytest.raises(KeyError):
+        mb.result(t3)
+
+
+def test_micro_batcher_evicts_abandoned_results(trained):
+    gbt, _, test = trained
+    bundle = make_forest_server(gbt, buckets=(16,), warmup=False)
+    mb = MicroBatcher(bundle, max_batch=4, max_results=3)
+    req = {k: v[:2] for k, v in test.items() if k != "income"}
+    tickets = [mb.submit(req) for _ in range(6)]  # auto-flushes every 2 reqs
+    mb.flush()
+    # only the newest max_results survive; the oldest were abandoned
+    assert len(mb._results) == 3
+    with pytest.raises(KeyError):
+        mb.result(tickets[0])
+    np.testing.assert_allclose(mb.result(tickets[-1]), gbt.predict(req), atol=0)
+
+
+# -------------------------------------------------------------- bench smoke
+
+def test_infer_bench_smoke():
+    from benchmarks import infer_bench
+    res = infer_bench.run(rows=400, num_trees=3, reps=1, verbose=False)
+    assert res["benchmark"] == "infer_bench"
+    assert set(res["configs"]) == {"gbt_adult", "rf_adult"}
+    for cfg in res["configs"].values():
+        a = cfg["after"]["vectorized"]
+        assert a["allclose"] is True
+        assert a["us_example"] > 0 and cfg["us_example_before"] > 0
+        assert "compile_s" in a
+    assert res["headline_speedup"] > 0
