@@ -7,6 +7,8 @@
   engines_bench   — App. B.4 per-engine us/example
   infer_bench     — DESIGN.md §5 compiled serving stack vs seed per-call
                     path (BENCH_infer.json when run as a module)
+  train_bench     — DESIGN.md §6 growth engines x histogram backends
+                    (BENCH_train.json when run as a module; --quick here)
   distributed_df  — §3.9 traffic scaling
   roofline_report — assignment §Roofline/§Dry-run tables (from results/)
 """
@@ -22,12 +24,20 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import accuracy_rank, distributed_df, engines_bench, \
-        infer_bench, speed
+        infer_bench, speed, train_bench
 
     t_all = time.time()
     if "speed" not in args.skip:
         print("== speed (paper Tab. 2) ==", flush=True)
         speed.run()
+    if "train" not in args.skip:
+        print("== training engines (DESIGN.md §6) ==", flush=True)
+        res = train_bench.run(num_trees=9, scaled_rows=20_000, reps_cap=1,
+                              include_device=False)
+        print(f"  headline: GBT {res['headline_speedup']:.2f}x, "
+              f"tree-parallel RF {res['rf_headline_speedup']:.2f}x vs the "
+              "seed grower (full 100k-row run: python -m "
+              "benchmarks.train_bench)")
     if "engines" not in args.skip:
         print("== engines (paper App. B.4) ==", flush=True)
         engines_bench.run()

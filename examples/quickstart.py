@@ -30,6 +30,23 @@ print("GBT vs RF accuracy:",
 print("RF out-of-bag self-evaluation:", rf.self_evaluation.metrics["accuracy"])
 print()
 
+# 5b. growth engines (DESIGN.md §6): "batched" is the host fast path (for RF
+#     it grows tree_parallelism trees in lockstep); "device" runs the whole
+#     level loop as one compiled XLA program (the TPU training path — on CPU
+#     hosts it is the portability/correctness path). Unsupported configs fall
+#     back to "batched" and say why. histogram_backend picks the histogram
+#     accumulator for the batched engine ("auto" is hardware-aware: pallas on
+#     TPU, numpy elsewhere — forcing "pallas" without a TPU raises).
+rf_dev = RandomForestLearner(label="income", num_trees=8, max_depth=6,
+                             compute_oob=False, growth_engine="device",
+                             histogram_backend="auto").train(train)
+logs = rf_dev.training_logs
+print(f"requested growth_engine='device' -> ran {logs['growth_engine']!r}"
+      + (f" (fallback: {logs['engine_fallback']})"
+         if logs["engine_fallback"] else
+         f", {logs['tree_parallelism']} trees per lockstep block"))
+print()
+
 # 6. deploy: engine compilation + inference benchmark (App. B.4)
 print(benchmark_inference(model, test))
 

@@ -83,7 +83,10 @@ class GradientBoostedTreesLearner(Learner):
         gp = GrowthParams(max_depth=hp.max_depth, max_nodes=max_nodes,
                           growing_strategy=hp.growing_strategy, splitter=sp,
                           engine=hp.growth_engine,
-                          histogram_backend=hp.histogram_backend)
+                          histogram_backend=hp.histogram_backend,
+                          sampling_key=self.seed & 0xFFFFFFFF)
+        from repro.core.grower import resolve_engine
+        engine_used, engine_fallback = resolve_engine(gp, td.binned, oblique)
         shrink, l2 = hp.shrinkage, hp.l2_regularization
 
         def leaf_fn(s):
@@ -150,7 +153,9 @@ class GradientBoostedTreesLearner(Learner):
             self_evaluation=self_eval)
         model.training_logs = {"train_loss": train_losses,
                                "valid_loss": valid_losses,
-                               "num_trees": forest.n_trees // K}
+                               "num_trees": forest.n_trees // K,
+                               "growth_engine": engine_used,
+                               "engine_fallback": engine_fallback}
         return model
 
 

@@ -9,19 +9,29 @@ Two strategies (paper §3.11 templates):
                          child histograms use the parent-minus-sibling
                          subtraction trick.
 
-Two engines (DESIGN.md §4):
-  * "batched" — the fast path. Level-wise: one vectorized ``apply_split`` pass
-    routes every frontier example and one flattened bincount aggregates all
-    child leaf stats. Best-first: per-node example index lists ride the heap,
-    only the smaller child's histogram is built and the sibling is derived as
-    ``parent - child``, making node evaluation O(smaller child) instead of
-    O(N). Histograms go through a pluggable backend (hist_backend.py:
-    numpy bincount or the one-hot-MXU Pallas kernel), selected by
-    ``GrowthParams.histogram_backend``.
+Three engines (DESIGN.md §4, §6):
+  * "batched" — the host fast path. Level-wise: one vectorized ``apply_split``
+    pass routes every frontier example and one flattened bincount aggregates
+    all child leaf stats. Best-first: per-node example index lists ride the
+    heap, only the smaller child's histogram is built and the sibling is
+    derived as ``parent - child``, making node evaluation O(smaller child)
+    instead of O(N). Histograms go through a pluggable backend
+    (hist_backend.py: numpy bincount or the one-hot-MXU Pallas kernel),
+    selected by ``GrowthParams.histogram_backend``.
   * "oracle"  — the seed-equivalent simple module (paper §2.3: the simple
     implementation is the ground truth): per-node partition loops and full-N
     histogram rebuilds, host numpy only. With the numpy backend the batched
     engine produces bit-identical trees at equal seeds (tested).
+  * "device"  — the device-resident jitted level loop (grower_device.py,
+    DESIGN.md §6): fused hist+gain kernel, padded power-of-two frontier, one
+    host sync per level (a single int32) and one forest fetch per tree block.
+
+Independent trees (Random Forest) can also grow as lockstep BLOCKS through
+``grow_trees``: with keyed per-node feature sampling (sampling.py) the growth
+schedule is semantics-free, so K trees advance one level per pass — the host
+lockstep path gathers only each node's sampled feature columns into one
+block-wide bincount (``best_splits_gathered``), which is what makes sqrt(F)
+Random Forest growth pay (DESIGN.md §6.3).
 
 The grower owns node allocation in the Forest SoA and the per-example
 ``node_of`` routing; leaf values come from a caller-provided ``leaf_fn`` over
@@ -29,6 +39,7 @@ aggregated node stats.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from dataclasses import dataclass, field
 from typing import Callable
@@ -37,12 +48,18 @@ import numpy as np
 
 from repro.core.api import YdfError
 from repro.core.binning import BinnedFeatures
-from repro.core.hist_backend import HistogramBackend, resolve_backend
+from repro.core.hist_backend import (
+    HistogramBackend,
+    _unique_stat_columns,
+    resolve_backend,
+)
+from repro.core.sampling import keyed_feature_select, sample_size
 from repro.core.splitters import (
     Split,
     SplitterParams,
     apply_split,
     best_splits,
+    best_splits_gathered,
     build_histogram,
     oblique_splits,
 )
@@ -55,8 +72,15 @@ class GrowthParams:
     max_nodes: int = 2048           # total node budget per tree
     growing_strategy: str = "LOCAL"  # LOCAL | BEST_FIRST_GLOBAL
     splitter: SplitterParams = field(default_factory=SplitterParams)
-    engine: str = "batched"          # batched | oracle (seed-equivalent)
+    engine: str = "batched"          # batched | oracle | device (DESIGN.md §6)
     histogram_backend: str = "auto"  # auto | numpy | pallas (batched engine)
+    # per-node feature sampling policy: "stream" draws masks from the shared
+    # rng (seed-faithful; couples draws to the growth schedule), "keyed"
+    # hashes (sampling_key, tree, node) — sampling.py — so every engine and
+    # execution order derives identical subsets (lockstep/device-safe).
+    feature_sampling: str = "stream"     # stream | keyed
+    sampling_key: int = 0
+    device_impl: str = "auto"            # auto | jnp | pallas | interpret
 
 
 def _set_split(forest: Forest, t: int, node: int, split: Split,
@@ -81,11 +105,44 @@ def _feature_sample_mask(n_nodes: int, F: int, ratio: float,
                          rng: np.random.Generator) -> np.ndarray | None:
     if ratio >= 1.0:
         return None
-    k = max(1, int(round(ratio * F)))
+    k = sample_size(ratio, F)
     mask = np.zeros((n_nodes, F), bool)
     for i in range(n_nodes):
         mask[i, rng.choice(F, size=k, replace=False)] = True
     return mask
+
+
+def _candidate_mask(nodes, t: int, F: int, params: GrowthParams,
+                    rng: np.random.Generator) -> np.ndarray | None:
+    """Per-node candidate-feature mask for frontier ``nodes`` of tree ``t``
+    under the active sampling policy (stream rng draws vs keyed hashes)."""
+    sp = params.splitter
+    if sp.num_candidate_ratio >= 1.0:
+        return None
+    if params.feature_sampling == "keyed":
+        sel = keyed_feature_select(params.sampling_key, int(t),
+                                   np.asarray(nodes, np.int64), F,
+                                   sample_size(sp.num_candidate_ratio, F))
+        mask = np.zeros((len(sel), F), bool)
+        np.put_along_axis(mask, sel, True, axis=1)
+        return mask
+    return _feature_sample_mask(len(nodes), F, sp.num_candidate_ratio, rng)
+
+
+def resolve_engine(params: GrowthParams, binned: BinnedFeatures | None = None,
+                   oblique_active: bool = False) -> tuple[str, str | None]:
+    """Map ``params.engine`` to the engine that will actually run, plus a
+    fallback reason (None when the request is honored). The "device" engine
+    supports the level-wise axis-aligned CART/ONE_HOT configurations; other
+    configurations fall back to the host "batched" engine."""
+    if params.engine not in ("batched", "oracle", "device"):
+        raise YdfError(f"Unknown growth engine {params.engine!r}. "
+                       "Expected one of: 'batched', 'oracle', 'device'.")
+    if params.engine != "device":
+        return params.engine, None
+    from repro.core.grower_device import device_unsupported_reason
+    reason = device_unsupported_reason(params, binned, oblique_active)
+    return ("batched", reason) if reason else ("device", None)
 
 
 def grow_tree(forest: Forest, t: int, binned: BinnedFeatures, X_raw: np.ndarray,
@@ -103,20 +160,76 @@ def grow_tree(forest: Forest, t: int, binned: BinnedFeatures, X_raw: np.ndarray,
     forest.leaf_value[t, 0] = leaf_fn(root_stats)
     forest.n_nodes[t] = 1
     best_first = params.growing_strategy == "BEST_FIRST_GLOBAL"
-    if params.engine == "oracle":
+    engine, _ = resolve_engine(params, binned,
+                               params.splitter.oblique and num_lo is not None)
+    if engine == "oracle":
         fn = _grow_best_first_oracle if best_first else _grow_level_wise_oracle
         depth = fn(forest, t, binned, X_raw, stats, node_of, params, rng,
                    leaf_fn, num_lo, num_hi)
-    elif params.engine == "batched":
+    elif engine == "device":
+        from repro.core.grower_device import grow_trees_device
+        return grow_trees_device(forest, [t], binned, [stats], [active],
+                                 leaf_fn, params)[0]
+    else:
         backend = resolve_backend(params.histogram_backend)
         fn = _grow_best_first_batched if best_first else _grow_level_wise_batched
         depth = fn(forest, t, binned, X_raw, stats, node_of, params, rng,
                    leaf_fn, num_lo, num_hi, backend)
-    else:
-        raise YdfError(f"Unknown growth engine {params.engine!r}. "
-                       "Expected one of: 'batched', 'oracle'.")
     forest.depth = max(forest.depth, depth)
     return node_of
+
+
+def _lockstep_ok(params: GrowthParams, num_lo) -> bool:
+    """Lockstep (K trees per level pass) is semantics-free only when growth
+    consumes no sequential rng: keyed (or no) feature sampling, no RANDOM
+    categorical trials, no oblique projections — and level-wise strategy.
+    The gathered bincount is a host-numpy formulation, so alternative
+    histogram backends keep the per-tree path."""
+    sp = params.splitter
+    return (params.growing_strategy == "LOCAL"
+            and sp.categorical_algorithm != "RANDOM"
+            and not (sp.oblique and num_lo is not None)
+            and (sp.num_candidate_ratio >= 1.0
+                 or params.feature_sampling == "keyed")
+            and resolve_backend(params.histogram_backend).name == "numpy")
+
+
+def grow_trees(forest: Forest, ts, binned: BinnedFeatures, X_raw: np.ndarray,
+               stats_list, actives, leaf_fn, params: GrowthParams, rngs,
+               num_lo=None, num_hi=None, block: int | None = None
+               ) -> np.ndarray:
+    """Grow a block of independent trees (Random Forest §3.6). With the
+    "device" engine or the lockstep host path the whole block advances one
+    LEVEL at a time (tree axis through the frontier state); otherwise trees
+    grow sequentially. All three produce identical forests when the sampling
+    policy is keyed (tested), so blocking is purely an execution choice.
+    ``block`` is the NOMINAL block width (e.g. tree_parallelism): the device
+    engine pads a short final block up to it so every block reuses the same
+    compiled programs. Returns per-tree final routing, (len(ts), N) int32."""
+    engine, _ = resolve_engine(params, binned,
+                               params.splitter.oblique and num_lo is not None)
+    if engine == "device" and params.growing_strategy == "LOCAL":
+        for b, t in enumerate(ts):
+            forest.leaf_value[t, 0] = leaf_fn(stats_list[b][actives[b]].sum(0))
+            forest.n_nodes[t] = 1
+        from repro.core.grower_device import grow_trees_device
+        return grow_trees_device(forest, ts, binned, stats_list, actives,
+                                 leaf_fn, params, block=block or len(ts))
+    if engine == "batched" and _lockstep_ok(params, num_lo) and len(ts) > 1:
+        node_of = np.stack([np.where(a, 0, -1).astype(np.int32)
+                            for a in actives])
+        for b, t in enumerate(ts):
+            forest.leaf_value[t, 0] = leaf_fn(stats_list[b][actives[b]].sum(0))
+            forest.n_nodes[t] = 1
+        _grow_level_wise_lockstep(forest, ts, binned, stats_list, node_of,
+                                  params, leaf_fn)
+        return node_of
+    params_seq = (params if engine == params.engine
+                  else dataclasses.replace(params, engine=engine))
+    return np.stack([
+        grow_tree(forest, t, binned, X_raw, stats_list[b], actives[b],
+                  leaf_fn, params_seq, rngs[b], num_lo, num_hi)
+        for b, t in enumerate(ts)])
 
 
 def _node_best_split(hist_slice, binned, sp, rng, X_raw, stats, node_of_c,
@@ -207,7 +320,7 @@ def _grow_level_wise_batched(forest, t, binned, X_raw, stats, node_of, params,
                 hist64[der] = hist64_prev[par_of[der]] - hist64[sib_of[der]]
             del hist64_prev
         hist = hist64.astype(np.float32)
-        mask = _feature_sample_mask(n_front, F, sp.num_candidate_ratio, rng)
+        mask = _candidate_mask(frontier, t, F, params, rng)
         splits = _node_best_split(hist, binned, sp, rng, X_raw, stats,
                                   node_of_c, n_front, num_lo, num_hi, mask)
         # -- allocate children (frontier order, shared node budget)
@@ -261,10 +374,12 @@ def _grow_level_wise_batched(forest, t, binned, X_raw, stats, node_of, params,
         # never produce a valid split, so it is pruned from the frontier
         # (identical output, skipped work) — but only when the splitter
         # consumes no randomness the pruning could shift: the per-node
-        # feature-sampling mask (one rng.choice per frontier node), RANDOM
-        # categorical trials and oblique projections (per-level draws that
-        # the oracle still makes for a frontier of unsplittable nodes).
-        prune = (sp.num_candidate_ratio >= 1.0
+        # feature-sampling mask (one rng.choice per frontier node — unless
+        # masks are KEYED by (tree, node), which pruning cannot perturb),
+        # RANDOM categorical trials and oblique projections (per-level draws
+        # that the oracle still makes for a frontier of unsplittable nodes).
+        prune = ((sp.num_candidate_ratio >= 1.0
+                  or params.feature_sampling == "keyed")
                  and sp.categorical_algorithm != "RANDOM"
                  and not (sp.oblique and num_lo is not None))
         keep = csum[:, -1] >= 2 * sp.min_examples if prune else \
@@ -317,8 +432,8 @@ def _grow_best_first_batched(forest, t, binned, X_raw, stats, node_of, params,
         return backend.build(binned.codes[idx], stats[idx],
                              np.zeros(len(idx), np.int32), 1)
 
-    def eval_node(idx: np.ndarray, hist64: np.ndarray) -> Split:
-        m = _feature_sample_mask(1, F, sp.num_candidate_ratio, rng)
+    def eval_node(node: int, idx: np.ndarray, hist64: np.ndarray) -> Split:
+        m = _candidate_mask([node], t, F, params, rng)
         node_of_c = None
         if oblique:  # oblique projections scan raw columns, not histograms
             node_of_c = np.full(N, -1, np.int32)
@@ -346,7 +461,7 @@ def _grow_best_first_batched(forest, t, binned, X_raw, stats, node_of, params,
 
     root_idx = np.where(node_of == 0)[0]
     h0 = build(root_idx)
-    s0 = eval_node(root_idx, h0)
+    s0 = eval_node(0, root_idx, h0)
     if s0.valid:
         heapq.heappush(heap, (-s0.gain, counter, 0, 0, s0))
         counter += 1
@@ -388,12 +503,140 @@ def _grow_best_first_batched(forest, t, binned, X_raw, stats, node_of, params,
         for child in (left, left + 1):  # fixed order keeps the rng sequence
             if not want[child]:
                 continue
-            cs = eval_node(child_idx[child], hists[child])
+            cs = eval_node(child, child_idx[child], hists[child])
             if cs.valid:
                 heapq.heappush(heap, (-cs.gain, counter, child, d + 1, cs))
                 counter += 1
                 stash(child, child_idx[child], hists[child])
     return depth
+
+
+def _grow_level_wise_lockstep(forest, ts, binned, stats_list, node_of,
+                              params, leaf_fn) -> None:
+    """Level-wise growth of K independent trees in lockstep (DESIGN.md §6.3).
+
+    The frontier spans (tree, node) slots; one gathered bincount accumulates
+    every tree's histograms and one gathered scan finds every best split.
+    Because per-node candidate features are KEYED (sampling.py) and only the
+    sampled columns are gathered, the histogram+scan cost is ``k/F`` of the
+    full-matrix pass (k = sqrt(F) under the Breiman rule) — the optimization
+    that makes Random Forest growth pay, single tree or lockstep.
+
+    Requires _lockstep_ok (no sequential rng in growth): under that
+    precondition the result is bit-identical to growing the trees one at a
+    time with the oracle engine (tested in tests/test_grower_device.py).
+    """
+    sp = params.splitter
+    K = len(ts)
+    F = binned.n_features
+    B = 256
+    codes = binned.codes
+    sample = sp.num_candidate_ratio < 1.0
+    kf = sample_size(sp.num_candidate_ratio, F) if sample else F
+    stats64 = [np.ascontiguousarray(s, np.float64) for s in stats_list]
+    S = stats64[0].shape[1]
+    frontiers: list[list[int]] = [[0] for _ in ts]
+    depths = [0] * K
+    ident = np.broadcast_to(np.arange(F, dtype=np.int32), (1, F))
+    for level in range(params.max_depth):
+        n_slots_k = [len(f) for f in frontiers]
+        n_slots = sum(n_slots_k)
+        if n_slots == 0:
+            break
+        base = np.concatenate([[0], np.cumsum(n_slots_k)]).astype(np.int64)
+        if sample:
+            feat_sel = np.concatenate(
+                [keyed_feature_select(params.sampling_key, int(ts[k]),
+                                      np.asarray(frontiers[k], np.int64), F, kf)
+                 for k in range(K) if n_slots_k[k]])
+        else:
+            feat_sel = np.broadcast_to(ident, (n_slots, F))
+        # -- gather each tree's frontier examples + their sampled codes
+        ex_k: list = [None] * K
+        slot_k: list = [None] * K                 # local slot per example
+        for k in range(K):
+            if not n_slots_k[k]:
+                continue
+            slotmap = np.full(forest.max_nodes, -1, np.int32)
+            slotmap[np.asarray(frontiers[k])] = np.arange(n_slots_k[k],
+                                                          dtype=np.int32)
+            sl = np.where(node_of[k] >= 0,
+                          slotmap[np.maximum(node_of[k], 0)], -1)
+            ex = np.where(sl >= 0)[0]
+            ex_k[k], slot_k[k] = ex, sl[ex]
+        ex_all = np.concatenate([e for e in ex_k if e is not None])
+        gslot = np.concatenate([slot_k[k] + base[k] for k in range(K)
+                                if ex_k[k] is not None]).astype(np.int64)
+        codes_sel = codes[ex_all[:, None], feat_sel[gslot]]      # (n_ex, kf)
+        wstats = np.concatenate([stats64[k][ex_k[k]] for k in range(K)
+                                 if ex_k[k] is not None])
+        # -- one flattened bincount over (slot, candidate, bin) buckets; per
+        # bucket the accumulation order stays example-ascending within one
+        # tree, bit-identical to the per-tree numpy backend
+        flat = ((gslot[:, None] * kf + np.arange(kf)[None]) * B
+                + codes_sel).ravel()
+        uniq, inv = _unique_stat_columns(wstats)
+        strips = [np.bincount(flat, weights=np.repeat(wstats[:, s], kf),
+                              minlength=n_slots * kf * B
+                              ).reshape(n_slots, kf, B) for s in uniq]
+        hist = np.empty((n_slots, kf, B, S), np.float32)
+        for s in range(S):
+            hist[..., s] = strips[inv[s]]
+        splits = best_splits_gathered(hist, feat_sel, binned, sp)
+        # -- per tree: allocate children, route, child stats, prune
+        for k in range(K):
+            n_k = n_slots_k[k]
+            if not n_k:
+                continue
+            t = ts[k]
+            spl = splits[base[k]:base[k + 1]]
+            left_of = np.full(n_k, -1, np.int32)
+            for i, node in enumerate(frontiers[k]):
+                s = spl[i]
+                if not s.valid or forest.n_nodes[t] + 2 > params.max_nodes:
+                    continue
+                left_of[i] = int(forest.n_nodes[t])
+                forest.n_nodes[t] += 2
+                _set_split(forest, t, node, s, binned)
+                forest.left_child[t, node] = left_of[i]
+                depths[k] = level + 1
+            split_slots = np.where(left_of >= 0)[0]
+            if not len(split_slots):
+                frontiers[k] = []
+                continue
+            feat = np.array([s.feature for s in spl], np.int32)
+            table = np.zeros((n_k, 256), bool)
+            for i in split_slots:
+                s = spl[i]
+                if s.cat_right is not None:
+                    table[i, s.cat_right] = True
+                else:
+                    table[i, s.split_bin:] = True
+            m = left_of[slot_k[k]] >= 0
+            ex, sl = ex_k[k][m], slot_k[k][m]
+            go = table[sl, codes[ex, np.maximum(feat[sl], 0)]]
+            node_of[k][ex] = left_of[sl] + go
+            ci_of = np.full(n_k, -1, np.int64)
+            ci_of[split_slots] = np.arange(len(split_slots))
+            child_code = 2 * ci_of[sl] + go
+            n_child = 2 * len(split_slots)
+            csum = np.bincount(
+                (child_code[:, None] * S + np.arange(S)).ravel(),
+                weights=np.ascontiguousarray(stats64[k][ex]).ravel(),
+                minlength=n_child * S).reshape(n_child, S)
+            keep = csum[:, -1] >= 2 * sp.min_examples
+            nf = []
+            for ci, i in enumerate(split_slots):
+                left = int(left_of[i])
+                forest.leaf_value[t, left] = leaf_fn(csum[2 * ci])
+                forest.leaf_value[t, left + 1] = leaf_fn(csum[2 * ci + 1])
+                if keep[2 * ci]:
+                    nf.append(left)
+                if keep[2 * ci + 1]:
+                    nf.append(left + 1)
+            frontiers[k] = nf
+    for d in depths:
+        forest.depth = max(forest.depth, d)
 
 
 # =====================================================================
@@ -416,7 +659,7 @@ def _grow_level_wise_oracle(forest, t, binned, X_raw, stats, node_of, params,
         node_of_c = np.where(node_of >= 0, slot[np.maximum(node_of, 0)], -1)
         hist = build_histogram(binned.codes, stats, node_of_c, len(frontier),
                                backend="simple")
-        mask = _feature_sample_mask(len(frontier), F, sp.num_candidate_ratio, rng)
+        mask = _candidate_mask(frontier, t, F, params, rng)
         splits = _node_best_split(hist, binned, sp, rng, X_raw, stats,
                                   node_of_c, len(frontier), num_lo, num_hi,
                                   mask, simple=True)
@@ -452,7 +695,7 @@ def _grow_best_first_oracle(forest, t, binned, X_raw, stats, node_of, params,
         node_of_c = np.where(mask01 > 0, 0, -1).astype(np.int32)
         hist = build_histogram(binned.codes, stats, node_of_c, 1,
                                backend="simple")
-        m = _feature_sample_mask(1, F, sp.num_candidate_ratio, rng)
+        m = _candidate_mask([node], t, F, params, rng)
         return _node_best_split(hist, binned, sp, rng, X_raw, stats, node_of_c,
                                 1, num_lo, num_hi, m, simple=True)[0]
 

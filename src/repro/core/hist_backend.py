@@ -184,7 +184,10 @@ def resolve_backend(name: str | HistogramBackend | None = "auto"
 
     "auto" is hardware-aware (mirrors engines.compile_model): the pallas
     kernel is only the fast path on TPU; on CPU hosts it would run in
-    interpret mode, so numpy wins.
+    interpret mode, so numpy wins. Forcing "pallas" without a supporting
+    device is an error — interpret mode is orders of magnitude slower than
+    numpy and must never end up on the training hot path silently; tests
+    and kernel debugging opt in explicitly with "pallas_interpret".
     """
     if isinstance(name, HistogramBackend):
         return name
@@ -192,12 +195,26 @@ def resolve_backend(name: str | HistogramBackend | None = "auto"
         name = "auto"
     if name == "auto":
         name = _auto_backend_name()
-    if name not in ("numpy", "pallas", "simple"):
+    if name == "pallas":
+        import jax
+        if jax.default_backend() != "tpu":
+            raise YdfError(
+                "histogram_backend='pallas' requires a TPU device; this host "
+                f"has jax backend {jax.default_backend()!r}, where the kernel "
+                "would run in interpret mode (orders of magnitude slower "
+                "than numpy). Solutions: (1) use histogram_backend='auto' "
+                "(hardware-aware), (2) use 'numpy', (3) opt into interpret "
+                "mode explicitly with 'pallas_interpret' (tests/debugging "
+                "only).")
+    if name not in ("numpy", "pallas", "pallas_interpret", "simple"):
         raise YdfError(
             f"Unknown histogram_backend {name!r}. "
-            "Expected one of: 'auto', 'numpy', 'pallas', 'simple'.")
+            "Expected one of: 'auto', 'numpy', 'pallas', 'pallas_interpret', "
+            "'simple'.")
     if name not in _CACHE:
-        _CACHE[name] = {"numpy": NumpyHistogramBackend,
-                        "pallas": PallasHistogramBackend,
-                        "simple": SimpleHistogramBackend}[name]()
+        _CACHE[name] = {
+            "numpy": NumpyHistogramBackend,
+            "pallas": PallasHistogramBackend,
+            "pallas_interpret": lambda: PallasHistogramBackend(interpret=True),
+            "simple": SimpleHistogramBackend}[name]()
     return _CACHE[name]

@@ -34,7 +34,7 @@ class GBTHparams:
     early_stopping_patience: int = 30       # trees without improvement
     max_bins: int = 255
     loss: str = "DEFAULT"                   # DEFAULT | BINOMIAL | MULTINOMIAL | SQUARED_ERROR
-    growth_engine: str = "batched"          # batched | oracle (seed-equivalent)
+    growth_engine: str = "batched"          # batched | oracle | device (§6)
     histogram_backend: str = "auto"         # auto | numpy | pallas
 
 
@@ -56,8 +56,11 @@ class RFHparams:
     compute_oob: bool = True
     max_num_nodes: int = 4096
     max_bins: int = 255
-    growth_engine: str = "batched"          # batched | oracle (seed-equivalent)
+    growth_engine: str = "batched"          # batched | oracle | device (§6)
     histogram_backend: str = "auto"         # auto | numpy | pallas
+    # trees grown per lockstep block (grower.grow_trees). Execution-only:
+    # forests are bit-identical for any value (keyed feature sampling).
+    tree_parallelism: int = 8
 
 
 @dataclass(frozen=True)
@@ -68,7 +71,7 @@ class CartHparams:
     validation_ratio: float = 0.1           # for pruning
     max_num_nodes: int = 4096
     max_bins: int = 255
-    growth_engine: str = "batched"          # batched | oracle (seed-equivalent)
+    growth_engine: str = "batched"          # batched | oracle | device (§6)
     histogram_backend: str = "auto"         # auto | numpy | pallas
 
 

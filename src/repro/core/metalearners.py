@@ -232,14 +232,21 @@ class CalibratedModel(Model):
 @register_learner("FEATURE_SELECTOR")
 class FeatureSelector(MetaLearner):
     """Greedy backward elimination scored by the model's Self-Evaluation
-    (OOB for RF — the paper's §3.6 example)."""
+    (OOB for RF — the paper's §3.6 example).
+
+    ``tolerance``: a removal is accepted when the self-eval score drops by at
+    most this much (default 0.0 — only score-preserving removals). Self-eval
+    scores carry sampling noise (OOB on a few hundred rows moves +-1-2%
+    between refits), so a small tolerance is what actually lets elimination
+    shed near-zero-value features instead of stalling on noise."""
 
     def __init__(self, base_factory: Callable[..., Learner], *, label: str,
                  task: Task = Task.CLASSIFICATION, max_removals: int | None = None,
-                 seed: int = 1234):
+                 tolerance: float = 0.0, seed: int = 1234):
         super().__init__(label, task, seed=seed)
         self.base_factory = base_factory
         self.max_removals = max_removals
+        self.tolerance = tolerance
 
     def train(self, dataset, valid=None) -> Model:
         ds = _as_vertical(dataset)
@@ -259,20 +266,30 @@ class FeatureSelector(MetaLearner):
         improved = True
         while improved and len(features) > 1 and len(removed) < max_rm:
             improved = False
-            # try dropping the k least-important features (NUM_NODES)
+            # fast path: try dropping the 3 least-important features first
+            # (NUM_NODES), then — only if none of those helps — the rest.
+            # NUM_NODES over-counts deep overfit splits on continuous noise
+            # columns, so the guided candidates alone can miss exactly the
+            # features most worth dropping.
             vi = best_model.variable_importances().get("NUM_NODES", {})
-            cands = sorted(features, key=lambda f: vi.get(f, 0.0))[:3]
-            trials = []
-            for cand in cands:
-                trial_feats = [f for f in features if f != cand]
-                m = fit(trial_feats)
-                trials.append((_self_eval_score(m), cand, m, trial_feats))
-            s, cand, m, trial_feats = max(trials, key=lambda t: t[0])
-            if s >= best_score:
-                best_model, best_score = m, s
-                features = trial_feats
-                removed.append(cand)
-                improved = True
+            order = sorted(features, key=lambda f: vi.get(f, 0.0))
+            for cands in (order[:3], order[3:]):
+                if not cands:
+                    continue
+                trials = []
+                for cand in cands:
+                    trial_feats = [f for f in features if f != cand]
+                    m = fit(trial_feats)
+                    trials.append((_self_eval_score(m), cand, m, trial_feats))
+                s, cand, m, trial_feats = max(trials, key=lambda t: t[0])
+                # each single removal may cost at most `tolerance` relative
+                # to the CURRENT model (plain thresholded elimination)
+                if s >= best_score - self.tolerance:
+                    best_model, best_score = m, s
+                    features = trial_feats
+                    removed.append(cand)
+                    improved = True
+                    break
         best_model.selected_features = features
         best_model.removed_features = removed
         return best_model

@@ -8,7 +8,7 @@ import numpy as np
 
 from repro.core.api import Learner, Task, YdfError, register_learner
 from repro.core.evaluation import evaluate_predictions
-from repro.core.grower import GrowthParams, grow_tree
+from repro.core.grower import GrowthParams, grow_trees, resolve_engine
 from repro.core.hparams import RFHparams, apply_template
 from repro.core.models import RandomForestModel, prepare_train_data
 from repro.core.splitters import SplitterParams
@@ -27,7 +27,6 @@ class RandomForestLearner(Learner):
 
     def train(self, dataset, valid=None) -> RandomForestModel:
         hp: RFHparams = self.hparams
-        rng = np.random.default_rng(self.seed)
         td = prepare_train_data(self, dataset, max_bins=hp.max_bins)
         N, F = td.binned.codes.shape
         if self.task == Task.CLASSIFICATION:
@@ -58,10 +57,21 @@ class RandomForestLearner(Learner):
             categorical_algorithm=hp.categorical_algorithm,
             num_candidate_ratio=ratio, oblique=oblique,
             oblique_num_projections_exponent=hp.sparse_oblique_num_projections_exponent)
+        # Per-tree rng streams + keyed per-node feature sampling: every draw
+        # is a function of (seed, tree) or (seed, tree, node), never of the
+        # order trees or nodes are processed in. That makes the growth
+        # schedule semantics-free, so independent trees can grow as lockstep
+        # BLOCKS (one level pass over tree_parallelism trees at a time —
+        # grower.grow_trees / DESIGN.md §6.3) with forests bit-identical to
+        # sequential growth at equal seeds (tested).
         gp = GrowthParams(max_depth=hp.max_depth, max_nodes=hp.max_num_nodes,
                           growing_strategy=hp.growing_strategy, splitter=sp,
                           engine=hp.growth_engine,
-                          histogram_backend=hp.histogram_backend)
+                          histogram_backend=hp.histogram_backend,
+                          feature_sampling="keyed",
+                          sampling_key=self.seed & 0xFFFFFFFF)
+        engine_used, fallback = resolve_engine(gp, td.binned, oblique)
+        block = max(1, int(hp.tree_parallelism))
         n_num = int((~td.binned.is_cat).sum())
         forest = empty_forest(hp.num_trees, hp.max_num_nodes, out_dim,
                               oblique_dims=n_num if oblique else 0,
@@ -72,18 +82,29 @@ class RandomForestLearner(Learner):
 
         oob_sum = np.zeros((N, out_dim), np.float64)
         oob_cnt = np.zeros(N, np.int64)
-        for t in range(hp.num_trees):
-            if hp.bootstrap:
-                counts = rng.multinomial(N, np.full(N, 1.0 / N)).astype(np.float64)
-            else:
-                counts = np.ones(N)
-            stats = base_stats * counts[:, None]
-            grow_tree(forest, t, td.binned, td.X_raw, stats, counts > 0,
-                      leaf_fn, gp, rng, td.num_lo, td.num_hi)
+        tree_rng = [np.random.default_rng((self.seed & 0xFFFFFFFF, 104729, t))
+                    for t in range(hp.num_trees)]
+        for b0 in range(0, hp.num_trees, block):
+            ts = list(range(b0, min(b0 + block, hp.num_trees)))
+            counts_b, stats_b = [], []
+            for t in ts:
+                if hp.bootstrap:
+                    counts = tree_rng[t].multinomial(
+                        N, np.full(N, 1.0 / N)).astype(np.float64)
+                else:
+                    counts = np.ones(N)
+                counts_b.append(counts)
+                stats_b.append(base_stats * counts[:, None])
+            grow_trees(forest, ts, td.binned, td.X_raw, stats_b,
+                       [c > 0 for c in counts_b], leaf_fn, gp,
+                       [tree_rng[t] for t in ts], td.num_lo, td.num_hi,
+                       block=block)
             if hp.compute_oob and hp.bootstrap:
-                oob = counts == 0
-                if oob.any():
-                    from repro.core.gbt import _one_tree
+                from repro.core.gbt import _one_tree
+                for bi, t in enumerate(ts):
+                    oob = counts_b[bi] == 0
+                    if not oob.any():
+                        continue
                     pr = predict_raw(_one_tree(forest, t), td.X_raw[oob])[:, 0]
                     if hp.winner_take_all and out_dim > 1:
                         vote = np.zeros_like(pr)
@@ -105,7 +126,11 @@ class RandomForestLearner(Learner):
                 self_eval = evaluate_predictions(self.task, preds[:, 0],
                                                  td.y[seen], source="out-of-bag")
 
-        return RandomForestModel(
+        model = RandomForestModel(
             winner_take_all=hp.winner_take_all, forest=forest, spec=td.ds.spec,
             features=td.features, label=self.label, task=self.task,
             classes=td.classes, self_evaluation=self_eval)
+        model.training_logs = {"growth_engine": engine_used,
+                               "engine_fallback": fallback,
+                               "tree_parallelism": block}
+        return model

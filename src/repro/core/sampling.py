@@ -1,0 +1,87 @@
+"""Keyed (counter-based) per-node feature sampling.
+
+Random Forests draw a feature subset per tree node (Breiman's sqrt rule).
+The seed implementation draws those subsets from the learner's sequential rng
+stream, which couples the draw order to the *growth schedule*: pruning an
+unsplittable node, reordering the frontier, or growing trees in lockstep all
+shift every later draw. That coupling is why PR 1's batched engine had to
+disable frontier pruning whenever ``num_candidate_ratio < 1``.
+
+Keyed sampling removes the coupling: the subset for node ``n`` of tree ``t``
+is a pure function ``hash(key, t, n)`` (a murmur3-style 32-bit finalizer,
+implemented identically in numpy and jnp). Any engine — sequential oracle,
+batched, K-tree lockstep, the device-resident jitted loop — derives the same
+subsets for the same (tree, node) pairs, so execution strategy is
+semantics-free by construction (tested bit-identical in
+tests/test_grower_device.py).
+
+The subset of size k is the k features with the smallest hash values
+(stable-argsorted, then index-sorted ascending so argmax tie-breaking matches
+the masked full-matrix scan: lowest feature index wins).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_GOLD = 0x9E3779B9
+
+
+def _mix_np(x: np.ndarray) -> np.ndarray:
+    """murmur3 fmix32 finalizer on uint32 arrays (wrapping arithmetic)."""
+    with np.errstate(over="ignore"):
+        x = x.astype(np.uint32, copy=True)
+        x ^= x >> np.uint32(16)
+        x *= np.uint32(0x85EBCA6B)
+        x ^= x >> np.uint32(13)
+        x *= np.uint32(0xC2B2AE35)
+        x ^= x >> np.uint32(16)
+    return x
+
+
+def feature_hash(key: int, tree: int, nodes: np.ndarray, F: int) -> np.ndarray:
+    """(len(nodes), F) uint32 hash lattice for (key, tree, node, feature)."""
+    h1 = _mix_np(np.uint32(key & 0xFFFFFFFF) ^ np.uint32(_GOLD))
+    h2 = _mix_np(h1 ^ np.uint32(tree & 0xFFFFFFFF))
+    hn = _mix_np(h2 ^ np.asarray(nodes, np.uint32))          # (n,)
+    with np.errstate(over="ignore"):
+        hf = np.arange(F, dtype=np.uint32) * np.uint32(_GOLD)
+    return _mix_np(hn[:, None] ^ hf[None, :])                # (n, F)
+
+
+def keyed_feature_select(key: int, tree: int, nodes: np.ndarray, F: int,
+                         k: int) -> np.ndarray:
+    """Per-node sampled feature indices: (len(nodes), k) int32, ascending."""
+    h = feature_hash(key, tree, nodes, F)
+    sel = np.argsort(h, axis=1, kind="stable")[:, :k]
+    return np.sort(sel, axis=1).astype(np.int32)
+
+
+def sample_size(ratio: float, F: int) -> int:
+    """Subset size for a sampling ratio — must match grower's stream-mode
+    ``_feature_sample_mask`` so keyed and stream modes sample equally many."""
+    return max(1, int(round(ratio * F)))
+
+
+# ---------------------------------------------------------------- jnp mirror
+
+def keyed_feature_select_jnp(key: int, tree, nodes, F: int, k: int):
+    """jnp mirror of keyed_feature_select. ``tree``/``nodes`` may be traced
+    (device) values; results are bit-identical to the numpy version, which is
+    what lets the device engine reproduce the host engines' feature subsets."""
+    import jax.numpy as jnp
+
+    def mix(x):
+        x = x.astype(jnp.uint32)
+        x = x ^ (x >> 16)
+        x = x * jnp.uint32(0x85EBCA6B)
+        x = x ^ (x >> 13)
+        x = x * jnp.uint32(0xC2B2AE35)
+        return x ^ (x >> 16)
+
+    h1 = mix(jnp.uint32(key & 0xFFFFFFFF) ^ jnp.uint32(_GOLD))
+    h2 = mix(h1 ^ jnp.asarray(tree, jnp.uint32))
+    hn = mix(h2 ^ jnp.asarray(nodes, jnp.uint32))            # (...,)
+    hf = jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(_GOLD)
+    h = mix(hn[..., None] ^ hf)                              # (..., F)
+    sel = jnp.argsort(h, axis=-1, stable=True)[..., :k]
+    return jnp.sort(sel, axis=-1).astype(jnp.int32)

@@ -1,1 +1,1 @@
-from repro.kernels.histogram.ops import histogram  # noqa: F401
+from repro.kernels.histogram.ops import fused_best_split, histogram  # noqa: F401

@@ -1,0 +1,189 @@
+"""Fused Pallas TPU kernel: histogram accumulation + gain scan + argmax.
+
+PR 1's training path built the full ``(nodes, F, B, S)`` histogram on device,
+shipped it to the host, and scanned gains in numpy — the kernel was off the
+critical path because the transfer dwarfed the accumulation (DESIGN.md §6).
+This kernel keeps the whole per-feature pipeline in VMEM:
+
+    1. accumulate hist[w, b, s] as one-hot MXU matmuls (as in histogram.py),
+    2. cumulative-sum the bins with an upper-triangular MXU matmul,
+    3. score left/right partitions per split position (gh / class / moment
+       stat layouts, §3.8), mask by min_examples,
+    4. argmax over bins, then fold into the running per-slot best across
+       features (grid-sequential read-modify-write, strict ``>`` so ties keep
+       the lowest feature index — numpy argmax semantics).
+
+Only the ``(n_slots, 3)`` best-(gain, feature, split_bin) tensor ever leaves
+the kernel; the ``(nodes, F, B, S)`` histogram lives and dies in VMEM scratch.
+
+Numerical (ordered-bin) conditions only: categorical splitters need a
+Fisher-order argsort, which the device engine runs as jnp inside the same jit
+(grower_device.py). Gain math lives in ``score_stats`` and is shared with the
+jnp reference path so kernel and oracle stay formula-identical.
+
+Grid: (kf, N // TN) — feature-major, example tiles inner (sequential on TPU,
+so the scratch accumulator and the cross-feature running best are
+well-defined read-modify-write).
+
+VMEM per step (TN=512, W=256, B=256, S=4): codes 512B + stats 8KB + one-hots
+~600KB + hist scratch 1MB + (1, W) outputs — well under the ~16MB budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu is import-safe on CPU; only used for scratch memory spaces
+    from jax.experimental.pallas import tpu as pltpu
+    _SCRATCH = pltpu.VMEM
+except Exception:  # pragma: no cover - very old jax
+    _SCRATCH = None
+
+NEG_INF = -1e30  # matches splitters.NEG_INF
+
+
+def score_stats(stats, kind: str, l2: float):
+    """jnp mirror of splitters._score on (..., S) stat vectors. Gain of a
+    split = score(L) + score(R) - score(P)."""
+    if kind == "gh":
+        g, h = stats[..., 0], stats[..., 1]
+        return 0.5 * jnp.square(g) / (h + l2 + 1e-12)
+    if kind == "class":
+        counts = stats[..., :-1]
+        n = stats[..., -1]
+        tot = jnp.maximum(n, 1e-12)[..., None]
+        p = counts / tot
+        ent = -(p * jnp.log(jnp.maximum(p, 1e-12))).sum(-1)
+        return -n * ent
+    if kind == "moment":
+        sy, n = stats[..., 0], stats[..., -1]
+        return jnp.square(sy) / jnp.maximum(n, 1e-12)
+    raise ValueError(kind)
+
+
+def _numerical_gains(hist, parent, kind: str, l2: float, min_examples: int):
+    """Split-position gains for ordered bins. hist: (..., B, S); parent:
+    (..., S). Position b means 'bins <= b go left' i.e. split_bin = b + 1;
+    the last position (nothing right) is masked. Returns (..., B) gains."""
+    B = hist.shape[-2]
+    left = jnp.cumsum(hist, axis=-2)                       # (..., B, S)
+    right = parent[..., None, :] - left
+    g = (score_stats(left, kind, l2) + score_stats(right, kind, l2)
+         - score_stats(parent, kind, l2)[..., None])
+    ok = ((left[..., -1] >= min_examples)
+          & (right[..., -1] >= min_examples)
+          & (jax.lax.broadcasted_iota(jnp.int32, g.shape, g.ndim - 1) < B - 1))
+    return jnp.where(ok, g, NEG_INF)
+
+
+def _fused_kernel(codes_ref, stats_ref, slot_ref, gain_ref, feat_ref, bin_ref,
+                  hist_ref, *, n_slots: int, n_bins: int, n_stats: int,
+                  n_tiles: int, kind: str, l2: float, min_examples: int):
+    j = pl.program_id(0)      # feature index (outer)
+    i = pl.program_id(1)      # example-tile index (inner, sequential)
+
+    @pl.when(i == 0)
+    def _init_hist():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    codes = codes_ref[...].astype(jnp.int32)[:, 0]              # (TN,)
+    slot = slot_ref[...].astype(jnp.int32)                      # (TN,)
+    stats = stats_ref[...]                                      # (TN, S)
+    active = (slot >= 0).astype(jnp.float32)
+    TN = codes.shape[0]
+
+    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (TN, n_bins), 1)
+    onehot_bin = (codes[:, None] == bin_iota).astype(jnp.float32)
+    slot_iota = jax.lax.broadcasted_iota(jnp.int32, (TN, n_slots), 1)
+    onehot_slot = (slot[:, None] == slot_iota).astype(jnp.float32)
+    onehot_slot = onehot_slot * active[:, None]
+
+    acc = hist_ref[...]                                         # (W, B, S)
+    for s in range(n_stats):
+        weighted = onehot_bin * stats[:, s][:, None]            # (TN, B)
+        h = jax.lax.dot_general(
+            onehot_slot, weighted, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                 # (W, B) MXU
+        acc = acc.at[:, :, s].add(h)
+    hist_ref[...] = acc
+
+    @pl.when(i == n_tiles - 1)
+    def _scan():
+        hist = hist_ref[...]                                    # (W, B, S)
+        parent = hist.sum(axis=1)                               # (W, S)
+        # cumulative sum over bins as an upper-triangular MXU matmul:
+        # cum[w, b] = sum_{b' <= b} hist[w, b']
+        r = jax.lax.broadcasted_iota(jnp.int32, (n_bins, n_bins), 0)
+        c = jax.lax.broadcasted_iota(jnp.int32, (n_bins, n_bins), 1)
+        tri = (r <= c).astype(jnp.float32)                      # (B, B)
+        left = jnp.stack(
+            [jax.lax.dot_general(hist[:, :, s], tri, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+             for s in range(n_stats)], axis=-1)                 # (W, B, S)
+        right = parent[:, None, :] - left
+        g = (score_stats(left, kind, l2) + score_stats(right, kind, l2)
+             - score_stats(parent, kind, l2)[:, None])          # (W, B)
+        pos = jax.lax.broadcasted_iota(jnp.int32, (n_slots, n_bins), 1)
+        ok = ((left[:, :, -1] >= min_examples)
+              & (right[:, :, -1] >= min_examples)
+              & (pos < n_bins - 1))
+        g = jnp.where(ok, g, NEG_INF)
+        bi = jnp.argmax(g, axis=1).astype(jnp.int32)            # (W,)
+        gb = jnp.max(g, axis=1)
+        prev_g = jnp.where(j == 0, NEG_INF, gain_ref[...][0])
+        prev_f = jnp.where(j == 0, -1, feat_ref[...][0])
+        prev_b = jnp.where(j == 0, 0, bin_ref[...][0])
+        better = gb > prev_g    # strict: ties keep the lowest feature index
+        gain_ref[...] = jnp.where(better, gb, prev_g)[None]
+        feat_ref[...] = jnp.where(better, j, prev_f).astype(jnp.int32)[None]
+        bin_ref[...] = jnp.where(better, bi + 1,
+                                 prev_b).astype(jnp.int32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_slots", "n_bins", "kind", "l2", "min_examples", "tile_n", "interpret"))
+def fused_split_pallas(codes: jax.Array, stats: jax.Array, slot_of: jax.Array,
+                       n_slots: int, n_bins: int = 256, *, kind: str = "gh",
+                       l2: float = 0.0, min_examples: int = 5,
+                       tile_n: int = 512, interpret: bool = False):
+    """codes: (N, kf) uint8 (numerical bin codes, one column per candidate
+    feature); stats: (N, S) f32; slot_of: (N,) int32 in [-1, n_slots).
+    -> (gain (n_slots,) f32, feature-column (n_slots,) i32, split_bin
+    (n_slots,) i32). feature == -1 when no position was scoreable."""
+    N, kf = codes.shape
+    S = stats.shape[1]
+    TN = min(tile_n, max(N, 1))
+    pad = (-N) % TN
+    if pad:
+        codes = jnp.pad(codes, ((0, pad), (0, 0)))
+        stats = jnp.pad(stats, ((0, pad), (0, 0)))
+        slot_of = jnp.pad(slot_of, (0, pad), constant_values=-1)
+    n_tiles = (N + pad) // TN
+
+    kernel = functools.partial(
+        _fused_kernel, n_slots=n_slots, n_bins=n_bins, n_stats=S,
+        n_tiles=n_tiles, kind=kind, l2=float(l2),
+        min_examples=int(min_examples))
+    out_shape = [
+        jax.ShapeDtypeStruct((1, n_slots), jnp.float32),
+        jax.ShapeDtypeStruct((1, n_slots), jnp.int32),
+        jax.ShapeDtypeStruct((1, n_slots), jnp.int32),
+    ]
+    out_spec = pl.BlockSpec((1, n_slots), lambda j, i: (0, 0))
+    gain, feat, sbin = pl.pallas_call(
+        kernel,
+        grid=(kf, n_tiles),
+        in_specs=[
+            pl.BlockSpec((TN, 1), lambda j, i: (i, j)),      # one feature col
+            pl.BlockSpec((TN, S), lambda j, i: (i, 0)),
+            pl.BlockSpec((TN,), lambda j, i: (i,)),
+        ],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=out_shape,
+        scratch_shapes=[_SCRATCH((n_slots, n_bins, S), jnp.float32)],
+        interpret=interpret,
+    )(codes, stats.astype(jnp.float32), slot_of.astype(jnp.int32))
+    return gain[0], feat[0], sbin[0]

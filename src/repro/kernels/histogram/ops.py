@@ -32,3 +32,25 @@ def histogram(codes, stats, node_of, n_nodes: int, n_bins: int = 256,
         return histogram_pallas(codes, stats, node_of, n_nodes, n_bins,
                                 interpret=True)
     raise ValueError(f"unknown impl {impl!r}")
+
+
+def fused_best_split(codes, stats, slot_of, n_slots: int, n_bins: int = 256,
+                     *, kind: str = "gh", l2: float = 0.0,
+                     min_examples: int = 5, impl: str | None = None):
+    """Fused histogram + ordered-bin gain scan + per-slot argmax (DESIGN.md
+    §6.1). codes: (N, kf) uint8 numerical bin codes; -> per-slot
+    (gain, feature-column, split_bin), the tiny ``(nodes, 3)`` output that
+    replaces the full ``(nodes, F, B, S)`` histogram on the training path."""
+    from repro.kernels.histogram.fused import fused_split_pallas
+    from repro.kernels.histogram.ref import fused_split_ref
+
+    if impl is None or impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return fused_split_ref(codes, stats, slot_of, n_slots, n_bins,
+                               kind=kind, l2=l2, min_examples=min_examples)
+    if impl in ("pallas", "interpret"):
+        return fused_split_pallas(codes, stats, slot_of, n_slots, n_bins,
+                                  kind=kind, l2=l2, min_examples=min_examples,
+                                  interpret=(impl == "interpret"))
+    raise ValueError(f"unknown impl {impl!r}")

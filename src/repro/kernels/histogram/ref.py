@@ -25,3 +25,27 @@ def histogram_ref(codes: jax.Array, stats: jax.Array, node_of: jax.Array,
     flat = jax.ops.segment_sum(contrib.reshape(N * F, S), seg.reshape(N * F),
                                num_segments=n_nodes * F * B)
     return flat.reshape(n_nodes, F, B, S)
+
+
+def fused_split_ref(codes: jax.Array, stats: jax.Array, slot_of: jax.Array,
+                    n_slots: int, n_bins: int = 256, *, kind: str = "gh",
+                    l2: float = 0.0, min_examples: int = 5):
+    """Pure-jnp oracle for the fused hist+gain kernel (fused.py): builds the
+    full histogram, runs the ordered-bin gain scan, and reduces to per-slot
+    best-(gain, feature-column, split_bin). Tie-breaking matches the kernel
+    and the numpy scan: flat argmax picks the lowest (feature, bin)."""
+    from repro.kernels.histogram.fused import NEG_INF, _numerical_gains
+
+    kf = codes.shape[1]
+    hist = histogram_ref(codes, stats.astype(jnp.float32), slot_of,
+                         n_slots, n_bins)                     # (W, kf, B, S)
+    parent = hist.sum(axis=2)                                 # (W, kf, S)
+    g = _numerical_gains(hist, parent, kind, float(l2),
+                         int(min_examples))                   # (W, kf, B)
+    flat = g.reshape(n_slots, kf * n_bins)
+    bi = jnp.argmax(flat, axis=1)
+    gain = jnp.max(flat, axis=1)
+    feat = (bi // n_bins).astype(jnp.int32)
+    sbin = (bi % n_bins).astype(jnp.int32) + 1
+    feat = jnp.where(gain <= NEG_INF, -1, feat)
+    return gain, feat, sbin

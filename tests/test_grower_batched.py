@@ -156,13 +156,16 @@ def test_backend_auto_resolution_is_hardware_aware():
 
 @pytest.mark.slow
 def test_training_with_pallas_backend_matches_numpy(adult):
-    """End-to-end wiring: histogram_backend="pallas" (interpret mode on CPU)
-    grows the same trees as the numpy backend up to f32 accumulation."""
+    """End-to-end wiring: histogram_backend="pallas_interpret" (the explicit
+    CPU opt-in) grows the same trees as the numpy backend up to f32
+    accumulation. Plain "pallas" on a CPU host raises instead (tested in
+    test_grower_device.py)."""
     small = {k: np.asarray(v)[:150] for k, v in adult.items()}
     kw = dict(label="income", num_trees=2, max_depth=3, validation_ratio=0.0,
               early_stopping="NONE")
     m_np = GradientBoostedTreesLearner(**kw, histogram_backend="numpy").train(small)
-    m_pl = GradientBoostedTreesLearner(**kw, histogram_backend="pallas").train(small)
+    m_pl = GradientBoostedTreesLearner(
+        **kw, histogram_backend="pallas_interpret").train(small)
     f_np, f_pl = m_np.forest, m_pl.forest
     np.testing.assert_array_equal(f_np.feature, f_pl.feature)
     np.testing.assert_array_equal(f_np.split_bin, f_pl.split_bin)
