@@ -14,6 +14,12 @@ once, then reused for every request batch.
 Every timed pair is checked for allclose predictions (the §2.3 contract).
 Engine compile time is reported separately (it is paid once, not per call).
 
+The ``sklearn_import`` config (DESIGN.md §7) times an imported 300-tree
+sklearn RandomForest through our compiled predictor against sklearn's own
+``predict_proba`` on the same rows — the cross-runtime serving comparison
+(Guan et al., 2023 protocol). It is recorded whenever scikit-learn is
+installed (an optional dependency) and skipped cleanly otherwise.
+
 Usage: python benchmarks/infer_bench.py [--rows N] [--trees T] [--out PATH]
 """
 from __future__ import annotations
@@ -54,7 +60,8 @@ def _best_of(fns: list, reps: int) -> tuple[list[float], list]:
 
 
 def run(rows: int = 100_000, num_trees: int = 30, reps: int = 3,
-        verbose: bool = True, include_interpret: bool = False) -> dict:
+        verbose: bool = True, include_interpret: bool = False,
+        sklearn_trees: int = 300) -> dict:
     import jax
     on_tpu = jax.default_backend() == "tpu"
     train, _ = train_test_split(adult_like(max(2000, min(rows, 4000))), 0.3, 1)
@@ -121,9 +128,62 @@ def run(rows: int = 100_000, num_trees: int = 30, reps: int = 3,
                   f"us/ex  compiled={a['us_example']:8.2f} us/ex  "
                   f"speedup={a['speedup']:5.2f}x  allclose={a['allclose']}",
                   flush=True)
+    sk = _run_sklearn_import(rows=rows, reps=reps, verbose=verbose,
+                             n_trees=sklearn_trees)
+    if sk is not None:
+        out["configs"]["sklearn_import"] = sk
     out["headline_speedup"] = out["configs"]["gbt_adult"]["after"][
         "vectorized"]["speedup"]
     return out
+
+
+def _run_sklearn_import(rows: int, reps: int, verbose: bool,
+                        n_trees: int = 300) -> dict | None:
+    """Imported n_trees-tree sklearn RF through the compiled predictor vs
+    sklearn's own predict_proba (both in-process, same rows)."""
+    try:
+        from sklearn.ensemble import RandomForestClassifier
+    except ImportError:
+        if verbose:
+            print("  sklearn_import skipped (scikit-learn not installed)")
+        return None
+    from repro.core.engines import compile_predictor
+    from repro.interop import from_sklearn
+
+    rng = np.random.default_rng(11)
+    F = 10
+    X = rng.normal(size=(4000, F)).astype(np.float32)
+    y = (X[:, 0] + np.square(X[:, 1]) - X[:, 2] > 0.3).astype(int)
+    est = RandomForestClassifier(n_estimators=n_trees, max_depth=12,
+                                 random_state=0).fit(X, y)
+    model = from_sklearn(est)
+    X_serve = rng.normal(size=(rows, F)).astype(np.float32)
+    batch = {f"f{i}": X_serve[:, i] for i in range(F)}
+    t0 = time.perf_counter()
+    pred = compile_predictor(model, "vectorized")
+    compile_s = time.perf_counter() - t0
+    pred.predict({k: v[:64] for k, v in batch.items()})  # warm untimed
+    times, outs = _best_of(
+        [lambda: est.predict_proba(X_serve), lambda: pred.predict(batch)],
+        reps)
+    row = {
+        "n_rows": rows,
+        "n_trees": len(est.estimators_),
+        "total_nodes": int(model.forest.n_nodes.sum()),
+        "max_depth": int(model.forest.depth),
+        "us_example_sklearn": round(times[0] / rows * 1e6, 3),
+        "us_example_compiled": round(times[1] / rows * 1e6, 3),
+        "speedup_vs_sklearn": round(times[0] / times[1], 3),
+        "compile_s": round(compile_s, 4),
+        "allclose": bool(np.allclose(outs[1], outs[0], atol=1e-5)),
+    }
+    if verbose:
+        print(f"  sklearn_import n={rows:<7d} "
+              f"sklearn={row['us_example_sklearn']:8.2f} us/ex  "
+              f"compiled={row['us_example_compiled']:8.2f} us/ex  "
+              f"ratio={row['speedup_vs_sklearn']:5.2f}x  "
+              f"allclose={row['allclose']}", flush=True)
+    return row
 
 
 def main():

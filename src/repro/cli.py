@@ -17,7 +17,6 @@ here loads from Python and vice versa.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import sys
 
@@ -25,24 +24,15 @@ import numpy as np
 
 
 def _load_spec(path: str):
-    from repro.core.dataspec import Column, DataSpec, Semantic
+    from repro.core.dataspec import spec_from_dict
     with open(path) as f:
-        raw = json.load(f)
-    cols = {}
-    for name, c in raw["columns"].items():
-        c["semantic"] = Semantic(c["semantic"])
-        cols[name] = Column(name=name, **{k: v for k, v in c.items() if k != "name"})
-    return DataSpec(columns=cols, n_rows=raw["n_rows"])
+        return spec_from_dict(json.load(f))
 
 
 def _dump_spec(spec, path: str):
-    out = {"n_rows": spec.n_rows, "columns": {}}
-    for name, c in spec.columns.items():
-        d = dataclasses.asdict(c)
-        d["semantic"] = c.semantic.value
-        out["columns"][name] = d
+    from repro.core.dataspec import spec_to_dict
     with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump(spec_to_dict(spec), f, indent=1)
 
 
 def cmd_infer_dataspec(args):
@@ -91,7 +81,22 @@ def cmd_train(args):
 
 def cmd_show_model(args):
     from repro.core import Model
-    print(Model.load(args.model).summary())
+    print(Model.load(args.model).summary(verbose=args.verbose))
+
+
+def cmd_import_sklearn(args):
+    """Import a pickled fitted sklearn estimator into a servable model
+    directory (DESIGN.md §7: the interop seam on the CLI)."""
+    import pickle
+
+    from repro.interop import from_sklearn
+    with open(args.estimator, "rb") as f:
+        est = pickle.load(f)
+    names = args.feature_names.split(",") if args.feature_names else None
+    model = from_sklearn(est, label=args.label, feature_names=names)
+    model.save(args.output)
+    print(f"imported {type(est).__name__} -> {type(model).__name__} "
+          f"({model.forest.n_trees} trees) written to {args.output}")
 
 
 def cmd_evaluate(args):
@@ -152,7 +157,18 @@ def main(argv=None):
 
     p = sub.add_parser("show_model")
     p.add_argument("--model", required=True)
+    p.add_argument("--verbose", type=int, default=0, nargs="?", const=4,
+                   help="render tree #0 down to this depth")
     p.set_defaults(fn=cmd_show_model)
+
+    p = sub.add_parser("import_sklearn")
+    p.add_argument("--estimator", required=True,
+                   help="pickled fitted sklearn estimator (.pkl)")
+    p.add_argument("--label", default="label")
+    p.add_argument("--feature-names", dest="feature_names",
+                   help="comma-separated feature column names")
+    p.add_argument("--output", required=True)
+    p.set_defaults(fn=cmd_import_sklearn)
 
     p = sub.add_parser("evaluate")
     p.add_argument("--dataset", required=True)

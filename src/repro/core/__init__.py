@@ -42,6 +42,24 @@ def __getattr__(name):
         "benchmark_inference": "repro.core.engines",
         "CompiledPredictor": "repro.core.engines",
         "compile_predictor": "repro.core.engines",
+        # typed tree API (DESIGN.md §7)
+        "Tree": "repro.core.py_tree",
+        "Leaf": "repro.core.py_tree",
+        "NonLeaf": "repro.core.py_tree",
+        "NumericalHigherThan": "repro.core.py_tree",
+        "CategoricalIsIn": "repro.core.py_tree",
+        "Oblique": "repro.core.py_tree",
+        "ProbabilityValue": "repro.core.py_tree",
+        "RegressionValue": "repro.core.py_tree",
+        "LogitValue": "repro.core.py_tree",
+        "ModelInspector": "repro.core.py_tree",
+        "ModelBuilder": "repro.core.py_tree",
+        "RandomForestBuilder": "repro.core.py_tree",
+        "GradientBoostedTreesBuilder": "repro.core.py_tree",
+        "CartBuilder": "repro.core.py_tree",
+        "FeatureColumn": "repro.core.py_tree",
+        # interop (train elsewhere, serve here)
+        "from_sklearn": "repro.interop.sklearn",
     }
     if name in lazy:
         import importlib

@@ -51,12 +51,13 @@ class Model(abc.ABC):
         """Classification: (N, n_classes) probabilities. Regression: (N,)."""
 
     def predict_class(self, dataset) -> np.ndarray:
-        p = self.predict(dataset)
+        # check the task BEFORE predicting: a wrong-task call must fail fast,
+        # not after paying for a full inference pass
         if self.task != Task.CLASSIFICATION:
             raise YdfError(
                 f"predict_class requires a classification model, got task={self.task}. "
                 "Use predict() for regression/ranking predictions.")
-        return np.argmax(p, axis=-1)
+        return np.argmax(self.predict(dataset), axis=-1)
 
     def evaluate(self, dataset) -> "Evaluation":
         from repro.core.evaluation import evaluate_predictions
@@ -66,7 +67,7 @@ class Model(abc.ABC):
                                     classes=getattr(self, "classes", None))
 
     # ---- self-description (show_model analogue)
-    def summary(self) -> str:
+    def summary(self, verbose: int | bool = False) -> str:
         return f"{type(self).__name__}(task={self.task.value}, label={self.label!r})"
 
     def variable_importances(self) -> dict[str, dict[str, float]]:
@@ -82,24 +83,62 @@ class Model(abc.ABC):
     FORMAT_VERSION = 1
 
     def save(self, path: str) -> None:
+        """Write the model directory: ``header.json`` (format tag),
+        ``model.pkl`` (the model), plus human-readable artefacts —
+        ``summary.txt`` and, when the model carries a dataspec,
+        ``dataspec.json`` — so saved models are inspectable without
+        unpickling (paper §4.1 artefact style)."""
         os.makedirs(path, exist_ok=True)
         meta = {"format_version": self.FORMAT_VERSION, "class": type(self).__name__}
         with open(os.path.join(path, "header.json"), "w") as f:
             json.dump(meta, f)
         with open(os.path.join(path, "model.pkl"), "wb") as f:
             pickle.dump(self, f)
+        with open(os.path.join(path, "summary.txt"), "w") as f:
+            f.write(self.summary() + "\n")
+        spec = getattr(self, "spec", None)
+        if spec is not None:
+            from repro.core.dataspec import spec_to_dict
+            with open(os.path.join(path, "dataspec.json"), "w") as f:
+                json.dump(spec_to_dict(spec), f, indent=1)
 
     @staticmethod
     def load(path: str) -> "Model":
-        with open(os.path.join(path, "header.json")) as f:
-            meta = json.load(f)
+        header = os.path.join(path, "header.json")
+        try:
+            with open(header) as f:
+                meta = json.load(f)
+        except FileNotFoundError:
+            raise YdfError(
+                f"No model found at {path!r}: missing 'header.json'. A model "
+                "directory is created by Model.save and contains header.json "
+                "+ model.pkl. Solutions: (1) check the path points at the "
+                "model DIRECTORY (not a file inside it), or (2) re-save the "
+                "model with model.save(path).") from None
+        except json.JSONDecodeError as e:
+            raise YdfError(
+                f"Model header {header!r} is corrupt (invalid JSON: {e}). "
+                "Solution: re-save the model with model.save(path); if the "
+                "file was hand-edited, restore the original header.") from None
+        if not isinstance(meta, dict) or "format_version" not in meta:
+            raise YdfError(
+                f"Model header {header!r} has no 'format_version' field "
+                f"(got: {meta!r}). Solution: re-save the model with "
+                "model.save(path) — headers are written automatically.")
         if meta["format_version"] > Model.FORMAT_VERSION:
             raise YdfError(
                 f"Model at {path!r} was saved with format v{meta['format_version']}, "
                 f"this library reads up to v{Model.FORMAT_VERSION}. Solutions: (1) "
                 "upgrade the library, or (2) re-export the model in an older format.")
-        with open(os.path.join(path, "model.pkl"), "rb") as f:
-            return pickle.load(f)
+        pkl = os.path.join(path, "model.pkl")
+        try:
+            with open(pkl, "rb") as f:
+                return pickle.load(f)
+        except FileNotFoundError:
+            raise YdfError(
+                f"Model directory {path!r} has a header but no 'model.pkl'. "
+                "The save was interrupted or the file was removed. Solution: "
+                "re-save the model with model.save(path).") from None
 
 
 # --------------------------------------------------------------------- Learner
@@ -109,18 +148,24 @@ class Learner(abc.ABC):
     is deterministic given (hyper-parameters, dataset, seed) — paper §3.11."""
 
     def __init__(self, label: str, task: Task = Task.CLASSIFICATION, *,
-                 seed: int = 1234, **hparams):
+                 seed: int = 1234, template: str | None = None, **hparams):
         self.label = label
         self.task = task
         self.seed = seed
-        self.hparams = self.default_hparams()
-        unknown = set(hparams) - set(dataclasses.asdict(self.hparams))
+        self.template = template
+        hp = self.default_hparams()
+        if template:
+            # template first, explicit overrides second (§3.11): a template
+            # is a bundle of defaults the caller can still override per-key
+            from repro.core.hparams import apply_template
+            hp = apply_template(_name_of(type(self)), hp, template)
+        unknown = set(hparams) - set(dataclasses.asdict(hp))
         if unknown:
-            known = sorted(dataclasses.asdict(self.hparams))
+            known = sorted(dataclasses.asdict(hp))
             raise YdfError(
                 f"Unknown hyper-parameter(s) {sorted(unknown)} for "
                 f"{type(self).__name__}. Known hyper-parameters: {known}.")
-        self.hparams = dataclasses.replace(self.hparams, **hparams)
+        self.hparams = dataclasses.replace(hp, **hparams)
 
     @abc.abstractmethod
     def train(self, dataset, valid=None) -> Model:
@@ -134,9 +179,12 @@ class Learner(abc.ABC):
 
     # cross-API-compatible training configuration (paper §3.10)
     def train_config(self) -> dict:
-        return {"learner": _name_of(type(self)), "label": self.label,
-                "task": self.task.value, "seed": self.seed,
-                "hparams": dataclasses.asdict(self.hparams)}
+        cfg = {"learner": _name_of(type(self)), "label": self.label,
+               "task": self.task.value, "seed": self.seed,
+               "hparams": dataclasses.asdict(self.hparams)}
+        if getattr(self, "template", None):
+            cfg["template"] = self.template
+        return cfg
 
 
 # --------------------------------------------------------------------- registry
@@ -173,10 +221,16 @@ def list_learners() -> list[str]:
 
 
 def make_learner(config: dict) -> Learner:
-    """Build a learner from a cross-API training configuration dict."""
+    """Build a learner from a cross-API training configuration dict. The
+    hparams dict already carries post-template values, so re-applying the
+    template then overriding with them reproduces the learner exactly —
+    the template name rides along for provenance."""
     cls = get_learner(config["learner"])
+    kw = dict(config.get("hparams", {}))
+    if config.get("template"):
+        kw["template"] = config["template"]
     return cls(label=config["label"], task=Task(config.get("task", "CLASSIFICATION")),
-               seed=config.get("seed", 1234), **config.get("hparams", {}))
+               seed=config.get("seed", 1234), **kw)
 
 
 _BUILTIN = False

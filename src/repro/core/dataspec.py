@@ -93,6 +93,29 @@ class DataSpec:
         return "\n".join(lines)
 
 
+# -------------------------------------------------- JSON (de)serialization
+
+def spec_to_dict(spec: DataSpec) -> dict:
+    """The stable JSON form of a DataSpec (CLI artefacts, Model.save's
+    ``dataspec.json``)."""
+    out = {"n_rows": spec.n_rows, "columns": {}}
+    for name, c in spec.columns.items():
+        d = dataclasses.asdict(c)
+        d["semantic"] = c.semantic.value
+        out["columns"][name] = d
+    return out
+
+
+def spec_from_dict(raw: dict) -> DataSpec:
+    cols = {}
+    for name, c in raw["columns"].items():
+        c = dict(c)
+        c["semantic"] = Semantic(c["semantic"])
+        cols[name] = Column(name=name,
+                            **{k: v for k, v in c.items() if k != "name"})
+    return DataSpec(columns=cols, n_rows=raw["n_rows"])
+
+
 # ----------------------------------------------------------------- inference
 
 _MISSING_TOKENS = {"", "na", "n/a", "nan", "none", "null", "?"}

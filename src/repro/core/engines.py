@@ -151,9 +151,9 @@ def benchmark_inference(model, dataset, *, repetitions: int = 5) -> str:
     their compile time is the closure-specialization cost alone, and a
     tiny-slice warmup just touches the code path.
     """
-    from repro.core.models import _as_vertical, raw_matrix
-    ds = _as_vertical(dataset, model.spec)
-    X = raw_matrix(ds, model.features)
+    # the compiled encoder only needs the FEATURE columns, so imported /
+    # built models benchmark on label-free request batches too (§5.1)
+    X = BatchEncoder(model.spec, model.features).encode(dataset)
     lines = ["benchmark_inference (avg over %d reps, batch=%d):"
              % (repetitions, X.shape[0])]
     for name in available_engines(model.forest):

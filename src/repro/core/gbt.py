@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.core.api import Learner, Task, YdfError, register_learner
 from repro.core.grower import GrowthParams, grow_tree
-from repro.core.hparams import GBTHparams, apply_template
+from repro.core.hparams import GBTHparams
 from repro.core.losses import make_loss
 from repro.core.models import (
     GradientBoostedTreesModel,
@@ -26,10 +26,8 @@ from repro.core.tree import Forest, empty_forest, predict_raw
 
 @register_learner("GRADIENT_BOOSTED_TREES")
 class GradientBoostedTreesLearner(Learner):
-    def __init__(self, label: str, task: Task = Task.CLASSIFICATION, *,
-                 seed: int = 1234, template: str | None = None, **hparams):
-        super().__init__(label, task, seed=seed, **hparams)
-        self.hparams = apply_template("GRADIENT_BOOSTED_TREES", self.hparams, template)
+    # hyper-parameter templates (``template="benchmark_rank1"``) are applied
+    # by the Learner base BEFORE explicit overrides (§3.11)
 
     def default_hparams(self) -> GBTHparams:
         return GBTHparams()

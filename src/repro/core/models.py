@@ -191,7 +191,14 @@ class DecisionForestModel(Model):
     def predict(self, dataset) -> np.ndarray:
         return self.predictor().predict(dataset)
 
-    def summary(self) -> str:
+    # -------- typed tree API (DESIGN.md §7)
+    def inspect(self):
+        """A ``py_tree.ModelInspector``: iterate trees as typed nodes,
+        per-tree depth/leaf stats, plot_tree-style ASCII rendering."""
+        from repro.core.py_tree import ModelInspector
+        return ModelInspector(self)
+
+    def summary(self, verbose: int | bool = False) -> str:
         c = self.forest.node_counts()
         lines = [f"Type: {type(self).__name__}",
                  f"Task: {self.task.value}", f'Label: "{self.label}"',
@@ -210,6 +217,17 @@ class DecisionForestModel(Model):
                          + ", ".join(f"{k}={v:.4g}" for k, v in
                                      self.self_evaluation.metrics.items()
                                      if isinstance(v, float)))
+        if verbose:
+            insp = self.inspect()
+            st = insp.stats_summary()
+            lines.append(
+                f"Tree depths: min={st['depth_min']} "
+                f"mean={st['depth_mean']:.1f} max={st['depth_max']}; "
+                f"leaves/tree mean={st['leaves_mean']:.1f} "
+                f"(total {st['leaves_total']})")
+            max_depth = 4 if verbose is True else int(verbose)
+            lines.append(f"Tree #0 (first {max_depth} levels):")
+            lines.append(insp.plot_tree(0, max_depth=max_depth))
         return "\n".join(lines)
 
     def variable_importances(self) -> dict[str, dict[str, float]]:

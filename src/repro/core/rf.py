@@ -9,7 +9,7 @@ import numpy as np
 from repro.core.api import Learner, Task, YdfError, register_learner
 from repro.core.evaluation import evaluate_predictions
 from repro.core.grower import GrowthParams, grow_trees, resolve_engine
-from repro.core.hparams import RFHparams, apply_template
+from repro.core.hparams import RFHparams
 from repro.core.models import RandomForestModel, prepare_train_data
 from repro.core.splitters import SplitterParams
 from repro.core.tree import empty_forest, predict_raw
@@ -17,10 +17,8 @@ from repro.core.tree import empty_forest, predict_raw
 
 @register_learner("RANDOM_FOREST")
 class RandomForestLearner(Learner):
-    def __init__(self, label: str, task: Task = Task.CLASSIFICATION, *,
-                 seed: int = 1234, template: str | None = None, **hparams):
-        super().__init__(label, task, seed=seed, **hparams)
-        self.hparams = apply_template("RANDOM_FOREST", self.hparams, template)
+    # hyper-parameter templates (``template="benchmark_rank1"``) are applied
+    # by the Learner base BEFORE explicit overrides (§3.11)
 
     def default_hparams(self) -> RFHparams:
         return RFHparams()

@@ -1,0 +1,3 @@
+"""Interop with other ML libraries (paper §2.1 "integration"): import
+externally-trained forests into this runtime's compiled serving stack."""
+from repro.interop.sklearn import from_sklearn  # noqa: F401

@@ -53,3 +53,10 @@ def _make_random_forest(n_trees, n_splits_list, n_features, out_dim=1,
 @pytest.fixture(scope="session")
 def random_forest_factory():
     return _make_random_forest
+
+
+@pytest.fixture(scope="session")
+def tiny_adult():
+    """A small mixed-semantics training set shared by model-layer tests."""
+    from repro.data.tabular import adult_like
+    return adult_like(400, seed=3)

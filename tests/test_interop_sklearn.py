@@ -1,0 +1,157 @@
+"""sklearn import: prediction equivalence through the compiled stack.
+
+The acceptance contract (ISSUE 4): imported models match the source
+estimator's predict_proba/predict to 1e-5 on held-out data, through both
+the compiled vectorized engine and the pallas engine (interpret mode on
+CPU). sklearn is an optional dependency — the whole module skips cleanly
+when it is absent.
+"""
+import numpy as np
+import pytest
+
+sklearn = pytest.importorskip("sklearn")
+
+from sklearn.ensemble import (  # noqa: E402
+    ExtraTreesClassifier,
+    GradientBoostingClassifier,
+    GradientBoostingRegressor,
+    RandomForestClassifier,
+    RandomForestRegressor,
+)
+from sklearn.tree import (  # noqa: E402
+    DecisionTreeClassifier,
+    DecisionTreeRegressor,
+)
+
+from repro.core.api import YdfError  # noqa: E402
+from repro.core.models import (  # noqa: E402
+    CartModel,
+    GradientBoostedTreesModel,
+    RandomForestModel,
+)
+from repro.interop import from_sklearn  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(600, 5)).astype(np.float32)
+    y_bin = (X[:, 0] + np.square(X[:, 1]) + rng.normal(0, 0.3, 600) > 0.7)
+    y_multi = np.where(X[:, 2] > 0.4, 2, y_bin.astype(int))
+    y_reg = (2 * X[:, 0] + np.sin(3 * X[:, 1])
+             + rng.normal(0, 0.1, 600)).astype(np.float64)
+    X_test = rng.normal(size=(200, 5)).astype(np.float32)
+    return X, y_bin.astype(int), y_multi, y_reg, X_test
+
+
+def _cols(A):
+    return {f"f{i}": A[:, i] for i in range(A.shape[1])}
+
+
+CASES = [
+    ("dt_cls", lambda: DecisionTreeClassifier(max_depth=8, random_state=0),
+     "bin", CartModel),
+    ("dt_reg", lambda: DecisionTreeRegressor(max_depth=8, random_state=0),
+     "reg", CartModel),
+    ("rf_cls", lambda: RandomForestClassifier(n_estimators=20, random_state=0),
+     "bin", RandomForestModel),
+    ("rf_multi", lambda: RandomForestClassifier(n_estimators=15, random_state=0),
+     "multi", RandomForestModel),
+    ("rf_reg", lambda: RandomForestRegressor(n_estimators=15, random_state=0),
+     "reg", RandomForestModel),
+    ("extra_cls", lambda: ExtraTreesClassifier(n_estimators=10, random_state=0),
+     "bin", RandomForestModel),
+    ("gbt_cls", lambda: GradientBoostingClassifier(n_estimators=25, random_state=0),
+     "bin", GradientBoostedTreesModel),
+    ("gbt_multi", lambda: GradientBoostingClassifier(n_estimators=12, random_state=0),
+     "multi", GradientBoostedTreesModel),
+    ("gbt_reg", lambda: GradientBoostingRegressor(n_estimators=25, random_state=0),
+     "reg", GradientBoostedTreesModel),
+]
+
+
+@pytest.mark.parametrize("name,make,target,model_cls",
+                         CASES, ids=[c[0] for c in CASES])
+def test_prediction_equivalence(data, name, make, target, model_cls):
+    X, y_bin, y_multi, y_reg, X_test = data
+    y = {"bin": y_bin, "multi": y_multi, "reg": y_reg}[target]
+    est = make().fit(X, y)
+    model = from_sklearn(est)
+    assert isinstance(model, model_cls)
+    ref = est.predict(X_test) if target == "reg" else est.predict_proba(X_test)
+    ours = np.asarray(model.predict(_cols(X_test)))
+    np.testing.assert_allclose(ours, ref, atol=1e-5)
+    if target != "reg":
+        assert model.classes == [str(c) for c in est.classes_]
+        np.testing.assert_array_equal(model.predict_class(_cols(X_test)),
+                                      est.predict(X_test))
+
+
+@pytest.mark.parametrize("engine", ["vectorized", "pallas"])
+def test_imported_models_through_compiled_engines(data, engine):
+    X, y_bin, _, _, X_test = data
+    est = RandomForestClassifier(n_estimators=12, max_depth=9,
+                                 random_state=1).fit(X, y_bin)
+    model = from_sklearn(est)
+    model.compile(engine)  # pallas runs interpret-mode on CPU hosts
+    assert model.predictor().name == engine
+    np.testing.assert_allclose(model.predict(_cols(X_test)),
+                               est.predict_proba(X_test), atol=1e-5)
+
+
+def test_imported_model_through_serving_bundle_and_microbatcher(data):
+    from repro.serving.forest import MicroBatcher, make_forest_server
+    X, y_bin, _, _, X_test = data
+    est = GradientBoostingClassifier(n_estimators=15, random_state=2)
+    est.fit(X, y_bin)
+    model = from_sklearn(est)
+    bundle = make_forest_server(model, "vectorized")
+    mb = MicroBatcher(bundle=bundle, max_batch=128)
+    t1 = mb.submit(_cols(X_test[:70]))
+    t2 = mb.submit(_cols(X_test[70:]))
+    out = np.concatenate([mb.result(t1), mb.result(t2)])
+    np.testing.assert_allclose(out, est.predict_proba(X_test), atol=1e-5)
+    assert mb.dispatches >= 1
+
+
+def test_threshold_ties_route_like_sklearn():
+    # integer-valued feature: splits land at .5 midpoints, and exact-value
+    # inputs must take sklearn's x <= t LEFT branch through our >= encoding
+    X = np.repeat(np.arange(8, dtype=np.float32), 10)[:, None]
+    y = (X[:, 0] >= 4).astype(int)
+    est = DecisionTreeClassifier(random_state=0).fit(X, y)
+    model = from_sklearn(est)
+    probe = np.arange(8, dtype=np.float32)[:, None]
+    np.testing.assert_allclose(model.predict({"f0": probe[:, 0]}),
+                               est.predict_proba(probe), atol=1e-6)
+
+
+def test_feature_names_from_override_and_errors(data):
+    X, y_bin, _, _, X_test = data
+    est = DecisionTreeClassifier(max_depth=4, random_state=0).fit(X, y_bin)
+    names = ["a", "b", "c", "d", "e"]
+    model = from_sklearn(est, label="income", feature_names=names)
+    assert model.features == names and model.label == "income"
+    model.predict({n: X_test[:8, i] for i, n in enumerate(names)})
+    with pytest.raises(YdfError, match="one name per training column"):
+        from_sklearn(est, feature_names=["too", "few"])
+
+
+def test_unfitted_and_unsupported_estimators_raise(data):
+    with pytest.raises(YdfError, match="not fitted"):
+        from_sklearn(DecisionTreeClassifier())
+    from sklearn.linear_model import LogisticRegression
+    X, y_bin, _, _, _ = data
+    with pytest.raises(YdfError, match="unsupported estimator"):
+        from_sklearn(LogisticRegression().fit(X, y_bin))
+
+
+def test_imported_model_save_load_roundtrip(tmp_path, data):
+    from repro.core import Model
+    X, y_bin, _, _, X_test = data
+    est = RandomForestClassifier(n_estimators=8, random_state=3).fit(X, y_bin)
+    model = from_sklearn(est)
+    before = model.predict(_cols(X_test))
+    model.save(str(tmp_path / "m"))
+    loaded = Model.load(str(tmp_path / "m"))
+    np.testing.assert_array_equal(loaded.predict(_cols(X_test)), before)

@@ -1,0 +1,146 @@
+"""Model persistence satellites (ISSUE 4): save→load→predict round-trip
+matrix, inspectable save artefacts, robust load errors, fail-fast
+predict_class, and hyper-parameter template wiring."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CartLearner,
+    GradientBoostedTreesLearner,
+    Model,
+    RandomForestLearner,
+    Task,
+    YdfError,
+    make_learner,
+)
+
+
+def _learners():
+    return [
+        ("rf_cls", RandomForestLearner, Task.CLASSIFICATION,
+         dict(num_trees=4, max_depth=4, compute_oob=False)),
+        ("rf_reg", RandomForestLearner, Task.REGRESSION,
+         dict(num_trees=4, max_depth=4, compute_oob=False)),
+        ("gbt_cls", GradientBoostedTreesLearner, Task.CLASSIFICATION,
+         dict(num_trees=4, max_depth=3)),
+        ("gbt_reg", GradientBoostedTreesLearner, Task.REGRESSION,
+         dict(num_trees=4, max_depth=3)),
+        ("cart_cls", CartLearner, Task.CLASSIFICATION, dict(max_depth=4)),
+        ("cart_reg", CartLearner, Task.REGRESSION, dict(max_depth=4)),
+    ]
+
+
+@pytest.fixture(scope="module")
+def reg_data(tiny_adult):
+    data = dict(tiny_adult)
+    rng = np.random.default_rng(5)
+    data["target"] = rng.normal(size=len(data["age"])).astype(object)
+    return data
+
+
+@pytest.mark.parametrize("name,cls,task,hp", _learners(),
+                         ids=[l[0] for l in _learners()])
+def test_save_load_predict_roundtrip_matrix(tmp_path, tiny_adult, reg_data,
+                                            name, cls, task, hp):
+    data = tiny_adult if task == Task.CLASSIFICATION else reg_data
+    label = "income" if task == Task.CLASSIFICATION else "target"
+    model = cls(label=label, task=task, **hp).train(data)
+    before = np.asarray(model.predict(data))
+    path = str(tmp_path / name)
+    model.save(path)
+    loaded = Model.load(path)
+    # predictors are runtime artifacts: the load starts cold and recompiles
+    assert loaded._predictor is None
+    after = np.asarray(loaded.predict(data))
+    assert loaded._predictor is not None
+    np.testing.assert_array_equal(before, after)  # byte-stable predictions
+
+
+def test_save_writes_inspectable_artifacts(tmp_path, tiny_adult):
+    from repro.core.dataspec import spec_from_dict
+    model = CartLearner(label="income", max_depth=3).train(tiny_adult)
+    path = str(tmp_path / "m")
+    model.save(path)
+    assert sorted(os.listdir(path)) == ["dataspec.json", "header.json",
+                                        "model.pkl", "summary.txt"]
+    text = open(os.path.join(path, "summary.txt")).read()
+    assert "CartModel" in text and '"income"' in text
+    with open(os.path.join(path, "dataspec.json")) as f:
+        spec = spec_from_dict(json.load(f))
+    assert set(spec.columns) == set(model.spec.columns)
+    assert spec["income"].vocab == model.spec["income"].vocab
+
+
+def test_load_missing_and_corrupt_headers_raise_ydf_errors(tmp_path):
+    with pytest.raises(YdfError, match="missing 'header.json'"):
+        Model.load(str(tmp_path / "nowhere"))
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "header.json").write_text("{not json")
+    with pytest.raises(YdfError, match="corrupt"):
+        Model.load(str(bad))
+    keyless = tmp_path / "keyless"
+    keyless.mkdir()
+    (keyless / "header.json").write_text('{"class": "X"}')
+    with pytest.raises(YdfError, match="format_version"):
+        Model.load(str(keyless))
+    nopkl = tmp_path / "nopkl"
+    nopkl.mkdir()
+    (nopkl / "header.json").write_text('{"format_version": 1}')
+    with pytest.raises(YdfError, match="model.pkl"):
+        Model.load(str(nopkl))
+
+
+def test_predict_class_checks_task_before_predicting(tiny_adult, reg_data):
+    model = CartLearner(label="target", task=Task.REGRESSION,
+                        max_depth=3).train(reg_data)
+
+    calls = []
+    original = type(model).predict
+
+    def spy(self, dataset):
+        calls.append(1)
+        return original(self, dataset)
+
+    type(model).predict = spy
+    try:
+        with pytest.raises(YdfError, match="classification"):
+            model.predict_class(reg_data)
+    finally:
+        type(model).predict = original
+    assert not calls  # the task check must fire BEFORE any inference
+
+
+# ------------------------------------------------------------- templates
+
+def test_template_applies_before_explicit_overrides():
+    l = GradientBoostedTreesLearner(label="y", template="benchmark_rank1",
+                                    split_axis="AXIS_ALIGNED", num_trees=7)
+    # template sets BEST_FIRST_GLOBAL+SPARSE_OBLIQUE; explicit override wins
+    assert l.hparams.growing_strategy == "BEST_FIRST_GLOBAL"
+    assert l.hparams.split_axis == "AXIS_ALIGNED"
+    assert l.hparams.num_trees == 7
+    assert l.template == "benchmark_rank1"
+
+
+def test_template_round_trips_through_train_config():
+    l = RandomForestLearner(label="y", template="benchmark_rank1",
+                            num_trees=9)
+    cfg = l.train_config()
+    assert cfg["template"] == "benchmark_rank1"
+    l2 = make_learner(cfg)
+    assert l2.hparams == l.hparams
+    assert l2.template == l.template
+    # no template -> key absent, still round-trips
+    l3 = RandomForestLearner(label="y", num_trees=9)
+    cfg3 = l3.train_config()
+    assert "template" not in cfg3
+    assert make_learner(cfg3).hparams == l3.hparams
+
+
+def test_unknown_template_raises():
+    with pytest.raises(YdfError, match="Unknown hyper-parameter template"):
+        CartLearner(label="y", template="benchmark_rank1")

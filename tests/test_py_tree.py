@@ -1,0 +1,357 @@
+"""Typed tree API (DESIGN.md §7): SoA round-trips, validation, builder,
+inspector."""
+import numpy as np
+import pytest
+
+from repro.core.api import Task, YdfError
+from repro.core.py_tree import (
+    CartBuilder,
+    CategoricalIsIn,
+    GradientBoostedTreesBuilder,
+    Leaf,
+    LogitValue,
+    NonLeaf,
+    NumericalHigherThan,
+    Oblique,
+    ProbabilityValue,
+    RandomForestBuilder,
+    RegressionValue,
+    Tree,
+    forest_from_trees,
+    forest_to_trees,
+)
+from repro.core.tree import Forest, predict_raw
+
+
+def assert_forest_equal(a: Forest, b: Forest) -> None:
+    for f in ("feature", "threshold", "split_bin", "cat_mask", "left_child",
+              "leaf_value", "n_nodes"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    assert a.depth == b.depth
+    assert a.out_dim == b.out_dim
+    assert (a.tree_class is None) == (b.tree_class is None)
+    if a.tree_class is not None:
+        assert np.array_equal(a.tree_class, b.tree_class)
+    assert np.array_equal(a.init_pred, b.init_pred)
+    assert a.feature_names == b.feature_names
+    for f in ("obl_weights", "obl_features"):
+        x, y = getattr(a, f), getattr(b, f)
+        assert (x is None) == (y is None), f
+        if x is not None:
+            assert np.array_equal(x, y), f
+
+
+def roundtrip(forest: Forest) -> Forest:
+    return Forest.from_trees(forest.to_trees(), like=forest)
+
+
+# ------------------------------------------------------------- round-trips
+
+def test_roundtrip_factory_forests_bit_identical(random_forest_factory):
+    # random split orders exercise non-BFS split_order hints
+    f = random_forest_factory(6, [9, 3, 17], 7, out_dim=3, seed=3,
+                              cat_feats=(2, 5))
+    assert_forest_equal(f, roundtrip(f))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_roundtrip_property_sweep(random_forest_factory, seed):
+    f = random_forest_factory(4, [1 + seed, 2 * seed + 3], 5,
+                              out_dim=1 + seed % 3, seed=seed,
+                              cat_feats=(0,) if seed % 2 else ())
+    assert_forest_equal(f, roundtrip(f))
+
+
+def test_roundtrip_single_leaf_tree(random_forest_factory):
+    f = random_forest_factory(2, [0], 3)
+    assert_forest_equal(f, roundtrip(f))
+
+
+def test_roundtrip_trained_forests(tiny_adult):
+    from repro.core import GradientBoostedTreesLearner, RandomForestLearner
+    rf = RandomForestLearner(label="income", num_trees=5, max_depth=5,
+                             compute_oob=False).train(tiny_adult)
+    assert_forest_equal(rf.forest, roundtrip(rf.forest))
+    gbt = GradientBoostedTreesLearner(label="income", num_trees=4,
+                                      max_depth=4).train(tiny_adult)
+    assert_forest_equal(gbt.forest, roundtrip(gbt.forest))
+
+
+def test_roundtrip_oblique_forest(tiny_adult):
+    from repro.core import RandomForestLearner
+    m = RandomForestLearner(label="income", num_trees=4, max_depth=5,
+                            split_axis="SPARSE_OBLIQUE",
+                            compute_oob=False).train(tiny_adult)
+    assert m.forest.has_oblique()
+    f2 = roundtrip(m.forest)
+    assert_forest_equal(m.forest, f2)
+    trees = m.forest.to_trees()
+    assert any(isinstance(n.condition, Oblique)
+               for tr in trees for n, _ in tr.iter_nodes() if not n.is_leaf)
+
+
+def test_pruned_cart_roundtrip_semantics_then_idempotent(tiny_adult):
+    # reduced-error pruning leaves unreachable slots + stale condition
+    # fields: the first round-trip COMPACTS (same predictions, canonical
+    # allocation), after which round-trips are bit-identical
+    from repro.core import CartLearner
+    from repro.core.models import _as_vertical, raw_matrix
+    m = CartLearner(label="income", max_depth=8).train(tiny_adult)
+    f = m.forest
+    f2 = Forest.from_trees(f.to_trees(), like=f)
+    X = raw_matrix(_as_vertical(tiny_adult), m.features)
+    np.testing.assert_array_equal(predict_raw(f, X), predict_raw(f2, X))
+    assert_forest_equal(f2, Forest.from_trees(f2.to_trees(), like=f2))
+
+
+def test_roundtrip_without_like_is_semantically_equal(random_forest_factory):
+    f = random_forest_factory(3, [6, 2], 5, out_dim=2, seed=9, cat_feats=(1,))
+    f2 = Forest.from_trees(f.to_trees())
+    X = np.random.default_rng(0).normal(size=(50, 5)).astype(np.float32)
+    X[:, 1] = np.random.default_rng(1).integers(0, 8, 50)
+    np.testing.assert_array_equal(predict_raw(f, X), predict_raw(f2, X))
+
+
+def test_hand_written_trees_get_level_order_allocation():
+    tree = Tree(root=NonLeaf(
+        condition=NumericalHigherThan(feature=0, threshold=1.0),
+        pos_child=Leaf(RegressionValue(2.0)),
+        neg_child=NonLeaf(condition=NumericalHigherThan(feature=1, threshold=-1.0),
+                          pos_child=Leaf(RegressionValue(1.0)),
+                          neg_child=Leaf(RegressionValue(0.0)))))
+    f = forest_from_trees([tree])
+    assert f.n_nodes[0] == 5 and f.depth == 2
+    assert f.left_child[0, 0] == 1   # root splits first -> children at 1, 2
+    X = np.array([[2.0, 0.0], [0.0, 0.0], [0.0, -2.0]], np.float32)
+    np.testing.assert_allclose(predict_raw(f, X)[:, 0, 0], [2.0, 1.0, 0.0])
+
+
+def test_edit_that_deepens_tree_raises_traversal_bound(random_forest_factory):
+    # like= copies layout metadata, but depth must track the DEEPENED tree:
+    # otherwise predict_raw stops above the new leaves (silent truncation)
+    f = random_forest_factory(1, [1], 2, seed=0)  # single root split, depth 1
+    trees = f.to_trees()
+    leaf = trees[0].root.pos_child
+    assert leaf.is_leaf
+    trees[0].root.pos_child = NonLeaf(
+        condition=NumericalHigherThan(feature=1, threshold=0.0),
+        pos_child=Leaf(RegressionValue(4.0)), neg_child=leaf)
+    f2 = Forest.from_trees(trees, like=f, max_nodes=8)
+    assert f2.depth == 2
+    X = np.full((1, 2), 10.0, np.float32)
+    np.testing.assert_allclose(predict_raw(f2, X)[:, 0, 0], [4.0])
+
+
+def test_split_order_preserved_over_edit_roundtrip(random_forest_factory):
+    # editing one leaf must not perturb the rest of the SoA
+    f = random_forest_factory(2, [8], 4, seed=5)
+    trees = f.to_trees()
+    node = trees[0].root
+    while not node.is_leaf:
+        node = node.pos_child
+    node.value = RegressionValue(123.0)
+    f2 = Forest.from_trees(trees, like=f)
+    assert not np.array_equal(f.leaf_value, f2.leaf_value)
+    for fld in ("feature", "threshold", "left_child", "n_nodes"):
+        assert np.array_equal(getattr(f, fld), getattr(f2, fld))
+
+
+# --------------------------------------------------------------- validation
+
+def test_from_trees_rejects_empty_categorical_set():
+    t = Tree(root=NonLeaf(condition=CategoricalIsIn(feature=0, categories=()),
+                          pos_child=Leaf(RegressionValue(1.0)),
+                          neg_child=Leaf(RegressionValue(0.0))))
+    with pytest.raises(YdfError, match="empty category set"):
+        forest_from_trees([t])
+
+
+def test_from_trees_rejects_out_of_range_category():
+    t = Tree(root=NonLeaf(condition=CategoricalIsIn(feature=0, categories=(999,)),
+                          pos_child=Leaf(RegressionValue(1.0)),
+                          neg_child=Leaf(RegressionValue(0.0))))
+    with pytest.raises(YdfError, match=r"\[0, 255\]"):
+        forest_from_trees([t])
+
+
+def test_from_trees_rejects_bad_feature_reference():
+    t = Tree(root=NonLeaf(condition=NumericalHigherThan(feature=7, threshold=0.0),
+                          pos_child=Leaf(RegressionValue(1.0)),
+                          neg_child=Leaf(RegressionValue(0.0))))
+    with pytest.raises(YdfError, match="only 2 input feature"):
+        forest_from_trees([t], feature_names=["a", "b"])
+
+
+def test_from_trees_enforces_node_budget():
+    t = Tree(root=NonLeaf(condition=NumericalHigherThan(feature=0, threshold=0.0),
+                          pos_child=Leaf(RegressionValue(1.0)),
+                          neg_child=Leaf(RegressionValue(0.0))))
+    with pytest.raises(YdfError, match="node budget"):
+        forest_from_trees([t], max_nodes=1)
+
+
+def test_from_trees_rejects_leaf_dim_mismatch():
+    t = Tree(root=NonLeaf(condition=NumericalHigherThan(feature=0, threshold=0.0),
+                          pos_child=Leaf(ProbabilityValue((0.5, 0.5))),
+                          neg_child=Leaf(RegressionValue(0.0))))
+    with pytest.raises(YdfError, match="dimension"):
+        forest_from_trees([t])
+
+
+def test_from_trees_rejects_shared_subtrees():
+    shared = Leaf(RegressionValue(1.0))
+    t = Tree(root=NonLeaf(condition=NumericalHigherThan(feature=0, threshold=0.0),
+                          pos_child=shared, neg_child=shared))
+    with pytest.raises(YdfError, match="not DAGs"):
+        forest_from_trees([t])
+
+
+def test_from_trees_rejects_oblique_arity_mismatch():
+    t = Tree(root=NonLeaf(
+        condition=Oblique(features=(0, 1), weights=(1.0,), threshold=0.0),
+        pos_child=Leaf(RegressionValue(1.0)),
+        neg_child=Leaf(RegressionValue(0.0))))
+    with pytest.raises(YdfError, match="weight"):
+        forest_from_trees([t])
+
+
+# ------------------------------------------------------------------ builder
+
+def _rf_builder():
+    return RandomForestBuilder(
+        label="y", task=Task.CLASSIFICATION, classes=["no", "yes"],
+        features=["age", ("color", "CATEGORICAL", ["red", "blue"])])
+
+
+def test_builder_end_to_end_with_categorical_strings():
+    b = _rf_builder()
+    b.add_tree(NonLeaf(
+        condition=CategoricalIsIn(feature=1, categories=("red",)),
+        pos_child=Leaf(ProbabilityValue((0.2, 0.8))),
+        neg_child=NonLeaf(
+            condition=NumericalHigherThan(feature=0, threshold=30.0),
+            pos_child=Leaf(ProbabilityValue((0.5, 0.5))),
+            neg_child=Leaf(ProbabilityValue((0.9, 0.1))))))
+    model = b.build()
+    p = model.predict({"age": [25, 40, 10], "color": ["red", "blue", "blue"]})
+    np.testing.assert_allclose(p, [[0.2, 0.8], [0.5, 0.5], [0.9, 0.1]],
+                               atol=1e-6)
+    # missing categorical imputes most-frequent (code 1 == "red"), missing
+    # numerical imputes the declared mean — exactly like trained models
+    p2 = model.predict({"age": [None], "color": [None]})
+    np.testing.assert_allclose(p2, [[0.2, 0.8]], atol=1e-6)
+    assert model.predict_class({"age": [25], "color": ["red"]})[0] == 1
+
+
+def test_builder_model_serves_through_engines_and_bundle():
+    from repro.serving.forest import make_forest_server
+    b = _rf_builder()
+    b.add_tree(NonLeaf(
+        condition=NumericalHigherThan(feature=0, threshold=30.0),
+        pos_child=Leaf(ProbabilityValue((0.1, 0.9))),
+        neg_child=Leaf(ProbabilityValue((0.7, 0.3)))))
+    model = b.build()
+    batch = {"age": [10, 50], "color": ["red", "blue"]}
+    ref = model.predict(batch)
+    for engine in ("vectorized", "naive", "pallas"):
+        model.compile(engine)
+        np.testing.assert_allclose(model.predict(batch), ref, atol=1e-6)
+    bundle = make_forest_server(model, "vectorized")
+    np.testing.assert_allclose(bundle.predict(batch), ref, atol=1e-6)
+
+
+def test_builder_validates_probability_sums():
+    b = _rf_builder()
+    b.add_tree(Leaf(ProbabilityValue((0.9, 0.9))))
+    with pytest.raises(YdfError, match="sums to"):
+        b.build()
+
+
+def test_builder_requires_classes_for_classification():
+    with pytest.raises(YdfError, match="classes"):
+        RandomForestBuilder(label="y", features=["a"], classes=None)
+
+
+def test_builder_rejects_unknown_category_string():
+    b = _rf_builder()
+    b.add_tree(NonLeaf(
+        condition=CategoricalIsIn(feature=1, categories=("green",)),
+        pos_child=Leaf(ProbabilityValue((0.5, 0.5))),
+        neg_child=Leaf(ProbabilityValue((0.5, 0.5)))))
+    with pytest.raises(YdfError, match="green"):
+        b.build()
+
+
+def test_cart_builder_single_tree_only():
+    b = CartBuilder(label="y", task=Task.REGRESSION, features=["x"])
+    b.add_tree(Leaf(RegressionValue(1.0)))
+    b.add_tree(Leaf(RegressionValue(2.0)))
+    with pytest.raises(YdfError, match="exactly one"):
+        b.build()
+
+
+def test_gbt_builder_binary_and_multiclass():
+    b = GradientBoostedTreesBuilder(
+        label="y", task=Task.CLASSIFICATION, classes=["a", "b"],
+        features=["x"], init_pred=[0.5])
+    b.add_tree(NonLeaf(condition=NumericalHigherThan(feature=0, threshold=0.0),
+                       pos_child=Leaf(LogitValue(1.0)),
+                       neg_child=Leaf(LogitValue(-1.0))))
+    m = b.build()
+    p = m.predict({"x": [2.0, -2.0]})
+    sig = 1 / (1 + np.exp(-(0.5 + np.array([1.0, -1.0]))))
+    np.testing.assert_allclose(p[:, 1], sig, atol=1e-6)
+
+    b3 = GradientBoostedTreesBuilder(
+        label="y", task=Task.CLASSIFICATION, classes=["a", "b", "c"],
+        features=["x"])
+    with pytest.raises(YdfError, match="tree_class"):
+        b3.add_tree(Leaf(LogitValue(0.0)))
+        b3.build()
+    b3.trees.clear()
+    for k in range(3):
+        b3.add_tree(Leaf(LogitValue(float(k))), tree_class=k)
+    p3 = b3.build().predict({"x": [0.0]})
+    z = np.array([0.0, 1.0, 2.0])
+    np.testing.assert_allclose(p3[0], np.exp(z) / np.exp(z).sum(), atol=1e-6)
+
+
+# ---------------------------------------------------------------- inspector
+
+def test_inspector_stats_and_render(tiny_adult):
+    from repro.core import RandomForestLearner
+    m = RandomForestLearner(label="income", num_trees=3, max_depth=4,
+                            compute_oob=False).train(tiny_adult)
+    insp = m.inspect()
+    stats = insp.tree_stats()
+    assert len(stats) == 3
+    for s in stats:
+        assert s["n_nodes"] == 2 * s["n_leaves"] - 1
+        assert s["depth"] <= 4
+    art = insp.plot_tree(0, max_depth=3)
+    assert "(pos)" in art and "(neg)" in art
+    assert any(f'"{f}"' in art for f in m.features)
+    # probability leaves name the classes
+    assert any(c in art for c in m.classes) or "max_depth reached" in art
+    verbose = m.summary(verbose=2)
+    assert "Tree depths:" in verbose and "Tree #0" in verbose
+    assert insp.tree(0).n_leaves >= 2
+    with pytest.raises(YdfError, match="out of range"):
+        insp.tree(99)
+
+
+def test_inspector_value_kinds(tiny_adult):
+    from repro.core import GradientBoostedTreesLearner
+    m = GradientBoostedTreesLearner(label="income", num_trees=2,
+                                    max_depth=3).train(tiny_adult)
+    leaf = m.inspect().tree(0).leaves()[0]
+    assert isinstance(leaf.value, LogitValue)
+
+
+def test_to_trees_value_kind_matches_leaf_dim(random_forest_factory):
+    f = random_forest_factory(1, [2], 3, out_dim=2)
+    trees = forest_to_trees(f)
+    assert isinstance(trees[0].leaves()[0].value, ProbabilityValue)
+    f1 = random_forest_factory(1, [2], 3, out_dim=1)
+    assert isinstance(forest_to_trees(f1)[0].leaves()[0].value,
+                      RegressionValue)

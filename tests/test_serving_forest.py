@@ -147,12 +147,20 @@ def test_micro_batcher_evicts_abandoned_results(trained):
 
 def test_infer_bench_smoke():
     from benchmarks import infer_bench
-    res = infer_bench.run(rows=400, num_trees=3, reps=1, verbose=False)
+    res = infer_bench.run(rows=400, num_trees=3, reps=1, verbose=False,
+                          sklearn_trees=5)
     assert res["benchmark"] == "infer_bench"
-    assert set(res["configs"]) == {"gbt_adult", "rf_adult"}
-    for cfg in res["configs"].values():
+    # sklearn_import is recorded when scikit-learn is installed (optional)
+    assert set(res["configs"]) - {"sklearn_import"} == {"gbt_adult",
+                                                        "rf_adult"}
+    for name in ("gbt_adult", "rf_adult"):
+        cfg = res["configs"][name]
         a = cfg["after"]["vectorized"]
         assert a["allclose"] is True
         assert a["us_example"] > 0 and cfg["us_example_before"] > 0
         assert "compile_s" in a
+    sk = res["configs"].get("sklearn_import")
+    if sk is not None:
+        assert sk["allclose"] is True
+        assert sk["n_trees"] == 5 and sk["us_example_compiled"] > 0
     assert res["headline_speedup"] > 0
