@@ -9,6 +9,9 @@
                     path (BENCH_infer.json when run as a module)
   train_bench     — DESIGN.md §6 growth engines x histogram backends
                     (BENCH_train.json when run as a module; --quick here)
+  analyze_bench   — DESIGN.md §8 permutation importance: compiled
+                    batched-replica path vs naive per-feature loop
+                    (BENCH_analyze.json when run as a module; quick here)
   distributed_df  — §3.9 traffic scaling
   roofline_report — assignment §Roofline/§Dry-run tables (from results/)
 """
@@ -23,8 +26,8 @@ def main() -> None:
     ap.add_argument("--skip", nargs="*", default=[])
     args = ap.parse_args()
 
-    from benchmarks import accuracy_rank, distributed_df, engines_bench, \
-        infer_bench, speed, train_bench
+    from benchmarks import accuracy_rank, analyze_bench, distributed_df, \
+        engines_bench, infer_bench, speed, train_bench
 
     t_all = time.time()
     if "speed" not in args.skip:
@@ -47,6 +50,13 @@ def main() -> None:
         print(f"  headline: {res['headline_speedup']:.2f}x compiled "
               "vectorized vs seed per-call path "
               "(full 100k-row run: python -m benchmarks.infer_bench)")
+    if "analyze" not in args.skip:
+        print("== model analysis (DESIGN.md §8) ==", flush=True)
+        res = analyze_bench.run(rows=400, num_trees=30, max_depth=8,
+                                repetitions=1, reps=1)
+        print(f"  headline: {res['speedup']:.2f}x batched replicas vs naive "
+              "loop at this small config (full 300-tree run: python -m "
+              "benchmarks.analyze_bench)")
     if "distributed" not in args.skip:
         print("== distributed DF traffic (paper §3.9) ==", flush=True)
         distributed_df.run()

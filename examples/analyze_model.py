@@ -1,0 +1,55 @@
+"""Analysis walkthrough: train -> evaluate -> analyze -> inspect
+(DESIGN.md §8; the paper's third pillar — interpretation — served by the
+compiled inference stack).
+
+    PYTHONPATH=src python examples/analyze_model.py
+"""
+import time
+
+from repro.analysis import permutation_importances
+from repro.core import RandomForestLearner
+from repro.data.tabular import adult_like, train_test_split
+
+# 1. train a Random Forest; out-of-bag self-evaluation is on by default and
+#    now surfaced in training_logs + summary() (previously unreachable)
+train, test = train_test_split(adult_like(4000), 0.3, seed=1)
+model = RandomForestLearner(label="income", num_trees=60,
+                            max_depth=10).train(train)
+oob = model.training_logs["oob"]
+print(f"trained: {model.forest.n_trees} trees; out-of-bag "
+      f"accuracy={oob['metrics']['accuracy']:.3f} over "
+      f"{oob['n_examples']} examples "
+      f"({oob['coverage']:.0%} coverage)\n")
+
+# 2. evaluate through the cached CompiledPredictor; the report is kept so
+#    model.save() writes evaluation.txt/.json beside summary.txt
+evaluation = model.evaluate(test)
+print(evaluation.report(), "\n")
+
+# 3. analyze: structural importances (one vectorized SoA pass), permutation
+#    importances (all permuted replicas stacked through the compiled
+#    serving path), the OOB variant (bags regenerated from model.bag_info),
+#    and partial-dependence sparklines — one report, text + JSON
+t0 = time.perf_counter()
+report = model.analyze(train, permutation_repetitions=3, grid_size=12)
+print(f"analyze(train) in {time.perf_counter() - t0:.1f}s")
+print(report.report(), "\n")
+
+# the same report as a JSON-serializable dict (CLI: analyze --json)
+payload = report.to_dict()
+print("JSON payload keys:", sorted(payload))
+top = report.importance("MEAN_DECREASE_ACCURACY").top(3)
+print("top-3 by permutation importance:",
+      [(e.feature, round(e.importance, 4)) for e in top], "\n")
+
+# 4. the engines compose with the serving layer: route the same sweep
+#    through a ForestServeBundle's padded buckets (§5.4 + §8.3)
+from repro.serving.forest import make_forest_server
+bundle = make_forest_server(model)
+table, _ = permutation_importances(model, test, repetitions=2, bundle=bundle)
+print("held-out permutation ranking via serving bundle:",
+      table.ranking(), "\n")
+
+# 5. interpretation meets the typed tree API (§7): the most important
+#    feature, then the first levels of tree #0
+print(model.summary(verbose=2))

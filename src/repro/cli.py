@@ -6,7 +6,9 @@
         --learner=GRADIENT_BOOSTED_TREES --output=/tmp/model \
         [--task=CLASSIFICATION] [--hparam num_trees=50] [--template=...]
   python -m repro.cli show_model --model=/tmp/model
-  python -m repro.cli evaluate --dataset=csv:test.csv --model=/tmp/model
+  python -m repro.cli evaluate --dataset=csv:test.csv --model=/tmp/model [--json]
+  python -m repro.cli analyze  --dataset=csv:test.csv --model=/tmp/model \
+        [--json] [--output=report.json] [--repetitions=3] [--sample=256]
   python -m repro.cli predict  --dataset=csv:test.csv --model=/tmp/model \
         --output=csv:predictions.csv
   python -m repro.cli benchmark_inference --dataset=csv:test.csv --model=/tmp/model
@@ -103,7 +105,31 @@ def cmd_evaluate(args):
     from repro.core import Model
     from repro.data.io import read_dataset
     model = Model.load(args.model)
-    print(model.evaluate(read_dataset(args.dataset)).report())
+    ev = model.evaluate(read_dataset(args.dataset))
+    if args.json:
+        print(json.dumps(ev.to_dict(), indent=1))
+    else:
+        print(ev.report())
+
+
+def cmd_analyze(args):
+    """Model analysis (DESIGN.md §8): structural importances always;
+    permutation importances, PDP curves and an evaluation when a dataset
+    is given. The report prints as text or dumps as JSON."""
+    from repro.core import Model
+    from repro.data.io import read_dataset
+    model = Model.load(args.model)
+    data = read_dataset(args.dataset) if args.dataset else None
+    rep = model.analyze(data, permutation_repetitions=args.repetitions,
+                        sample_rows=args.sample)
+    if args.output:
+        with open(args.output, "w") as f:
+            json.dump(rep.to_dict(), f, indent=1)
+        print(f"analysis report written to {args.output}")
+    if args.json:
+        print(json.dumps(rep.to_dict(), indent=1))
+    elif not args.output:
+        print(rep.report())
 
 
 def cmd_predict(args):
@@ -173,7 +199,22 @@ def main(argv=None):
     p = sub.add_parser("evaluate")
     p.add_argument("--dataset", required=True)
     p.add_argument("--model", required=True)
+    p.add_argument("--json", action="store_true",
+                   help="dump the evaluation as JSON instead of text")
     p.set_defaults(fn=cmd_evaluate)
+
+    p = sub.add_parser("analyze")
+    p.add_argument("--model", required=True)
+    p.add_argument("--dataset",
+                   help="analysis dataset; omit for structural-only analysis")
+    p.add_argument("--json", action="store_true",
+                   help="dump the report as JSON instead of text")
+    p.add_argument("--output", help="write the JSON report to this path")
+    p.add_argument("--repetitions", type=int, default=3,
+                   help="permutation-importance repetitions")
+    p.add_argument("--sample", type=int, default=256,
+                   help="background sample size for PDP curves")
+    p.set_defaults(fn=cmd_analyze)
 
     p = sub.add_parser("predict")
     p.add_argument("--dataset", required=True)

@@ -60,6 +60,15 @@ def __getattr__(name):
         "FeatureColumn": "repro.core.py_tree",
         # interop (train elsewhere, serve here)
         "from_sklearn": "repro.interop.sklearn",
+        # analysis subsystem (DESIGN.md §8)
+        "analyze_model": "repro.analysis",
+        "AnalysisReport": "repro.analysis",
+        "ImportanceTable": "repro.analysis",
+        "PDPCurve": "repro.analysis",
+        "permutation_importances": "repro.analysis",
+        "oob_permutation_importances": "repro.analysis",
+        "structural_importances": "repro.analysis",
+        "partial_dependence": "repro.analysis",
     }
     if name in lazy:
         import importlib

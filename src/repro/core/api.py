@@ -63,8 +63,19 @@ class Model(abc.ABC):
         from repro.core.evaluation import evaluate_predictions
         from repro.core.dataspec import label_values
         y = label_values(self, dataset)
-        return evaluate_predictions(self.task, self.predict(dataset), y,
-                                    classes=getattr(self, "classes", None))
+        ev = evaluate_predictions(self.task, self.predict(dataset), y,
+                                  classes=getattr(self, "classes", None))
+        # kept so Model.save can write the report beside summary.txt
+        self._last_evaluation = ev
+        return ev
+
+    def analyze(self, dataset=None, **kwargs) -> "AnalysisReport":
+        """Model-analysis report (DESIGN.md §8): structural variable
+        importances always; permutation importances, partial dependence and
+        an evaluation when a dataset is given. Decision-forest models route
+        every analysis sweep through the compiled serving stack."""
+        from repro.analysis import analyze_model
+        return analyze_model(self, dataset, **kwargs)
 
     # ---- self-description (show_model analogue)
     def summary(self, verbose: int | bool = False) -> str:
@@ -101,6 +112,15 @@ class Model(abc.ABC):
             from repro.core.dataspec import spec_to_dict
             with open(os.path.join(path, "dataspec.json"), "w") as f:
                 json.dump(spec_to_dict(spec), f, indent=1)
+        # the last evaluate() result rides along as a readable artefact
+        # (plus its JSON form) so a saved model directory answers "how good
+        # is it?" without re-running inference
+        ev = getattr(self, "_last_evaluation", None)
+        if ev is not None:
+            with open(os.path.join(path, "evaluation.txt"), "w") as f:
+                f.write(ev.report() + "\n")
+            with open(os.path.join(path, "evaluation.json"), "w") as f:
+                json.dump(ev.to_dict(), f, indent=1)
 
     @staticmethod
     def load(path: str) -> "Model":

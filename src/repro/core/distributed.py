@@ -283,6 +283,8 @@ class DistributedGBT:
                     if valid:
                         forest.split_bin[t, pid] = tree["bin"][cid]
                         forest.threshold[t, pid] = float(tree["bin"][cid]) - 0.5
+                        forest.split_gain[t, pid] = max(
+                            float(tree["gain"][cid]), 0.0)
                     else:
                         forest.split_bin[t, pid] = 65535
                         forest.threshold[t, pid] = np.float32(3e38)

@@ -30,6 +30,16 @@ class Evaluation:
             return self.metrics["accuracy"]
         return -self.metrics["rmse"]
 
+    def to_dict(self) -> dict:
+        """JSON-serializable form (analysis reports, CLI --json, artefacts)."""
+        metrics = {k: (list(v) if isinstance(v, tuple) else float(v))
+                   for k, v in self.metrics.items()}
+        return {"task": self.task.value, "n_examples": int(self.n_examples),
+                "source": self.source, "metrics": metrics,
+                "classes": self.classes,
+                "confusion": (None if self.confusion is None
+                              else self.confusion.tolist())}
+
     def report(self) -> str:
         L = [f"Evaluation ({self.source}):",
              f"Number of predictions: {self.n_examples}",

@@ -85,6 +85,10 @@ class GrowthParams:
 
 def _set_split(forest: Forest, t: int, node: int, split: Split,
                binned: BinnedFeatures) -> None:
+    if forest.split_gain is not None:
+        # recorded for the SUM_SCORE structural importance (DESIGN.md §8);
+        # never read back by training, so it cannot perturb growth
+        forest.split_gain[t, node] = max(float(split.gain), 0.0)
     if split.obl_features is not None:
         forest.feature[t, node] = -2
         k = min(len(split.obl_features), forest.obl_weights.shape[-1])

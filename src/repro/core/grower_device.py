@@ -243,7 +243,8 @@ def _level_step(cfg: _StepConfig):
 
     @jax.jit
     def step(codes, nbins, iscat, stats, tree_ids, slot_of, slot_node,
-             feat_a, sbin_a, catm_a, left_a, lstats_a, nn, node_of, depth):
+             feat_a, sbin_a, catm_a, left_a, gain_a, lstats_a, nn, node_of,
+             depth):
         K, P = slot_node.shape
         N = codes.shape[0]
         karange = jnp.arange(K)[:, None]
@@ -287,6 +288,8 @@ def _level_step(cfg: _StepConfig):
         feat_a = feat_a.at[karange, pidx].set(feat_w, mode="drop")
         sbin_a = sbin_a.at[karange, pidx].set(sbin_w, mode="drop")
         left_a = left_a.at[karange, pidx].set(left_id, mode="drop")
+        gain_a = gain_a.at[karange, pidx].set(jnp.maximum(gain, 0.0),
+                                              mode="drop")
         bits = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
         packed = (tbl.reshape(K, P, MASK_WORDS, 32).astype(jnp.uint32)
                   * bits).sum(axis=3, dtype=jnp.uint32)
@@ -318,7 +321,7 @@ def _level_step(cfg: _StepConfig):
         nidx = jnp.where(child_node >= 0, child_node, M)
         lstats_a = lstats_a.at[karange, nidx].set(csum, mode="drop")
 
-        return (slot_of, child_node, feat_a, sbin_a, catm_a, left_a,
+        return (slot_of, child_node, feat_a, sbin_a, catm_a, left_a, gain_a,
                 lstats_a, nn, node_of, depth, nv)
 
     return step
@@ -387,16 +390,18 @@ def grow_trees_device(forest: Forest, ts, binned: BinnedFeatures,
     sbin_a = jnp.zeros((K, M), jnp.int32)
     catm_a = jnp.zeros((K, M, MASK_WORDS), jnp.uint32)
     left_a = jnp.full((K, M), -1, jnp.int32)
+    gain_a = jnp.zeros((K, M), jnp.float32)
     lstats_a = jnp.zeros((K, M, S), jnp.float32)
     lstats_a = lstats_a.at[:, 0].set(stats.sum(axis=1))
     nn = jnp.ones((K,), jnp.int32)
     depth = jnp.zeros((K,), jnp.int32)
 
     for _level in range(params.max_depth):
-        (slot_of, slot_node, feat_a, sbin_a, catm_a, left_a, lstats_a, nn,
-         node_of, depth, nv) = step(
+        (slot_of, slot_node, feat_a, sbin_a, catm_a, left_a, gain_a,
+         lstats_a, nn, node_of, depth, nv) = step(
             codes, nbins, iscat, stats, tree_ids, slot_of, slot_node,
-            feat_a, sbin_a, catm_a, left_a, lstats_a, nn, node_of, depth)
+            feat_a, sbin_a, catm_a, left_a, gain_a, lstats_a, nn, node_of,
+            depth)
         # the single per-level host sync: the compacted frontier width,
         # used to choose the next power-of-two shape bucket
         nv_max = int(nv.max())
@@ -406,9 +411,10 @@ def grow_trees_device(forest: Forest, ts, binned: BinnedFeatures,
         slot_node = slot_node[:, :P_next]
 
     # one fetch per block: decode device arrays into the host Forest
-    feat_h, sbin_h, catm_h, left_h, lstats_h, nn_h, node_h, depth_h = (
-        np.asarray(a) for a in
-        (feat_a, sbin_a, catm_a, left_a, lstats_a, nn, node_of, depth))
+    (feat_h, sbin_h, catm_h, left_h, gain_h, lstats_h, nn_h, node_h,
+     depth_h) = (np.asarray(a) for a in
+                 (feat_a, sbin_a, catm_a, left_a, gain_a, lstats_a, nn,
+                  node_of, depth))
     for b, t in enumerate(ts):
         n_t = int(nn_h[b])
         forest.n_nodes[t] = n_t
@@ -416,6 +422,8 @@ def grow_trees_device(forest: Forest, ts, binned: BinnedFeatures,
         forest.left_child[t, :M] = left_h[b]
         forest.cat_mask[t, :M] = catm_h[b]
         forest.split_bin[t, :M] = np.maximum(sbin_h[b], 0).astype(np.uint16)
+        if forest.split_gain is not None:
+            forest.split_gain[t, :M] = gain_h[b]
         for n in range(1, n_t):
             forest.leaf_value[t, n] = leaf_fn(lstats_h[b, n].astype(np.float64))
         for n in np.where((feat_h[b, :n_t] >= 0)

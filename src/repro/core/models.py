@@ -217,6 +217,12 @@ class DecisionForestModel(Model):
                          + ", ".join(f"{k}={v:.4g}" for k, v in
                                      self.self_evaluation.metrics.items()
                                      if isinstance(v, float)))
+        oob = getattr(self, "training_logs", {}).get("oob") \
+            if isinstance(getattr(self, "training_logs", None), dict) else None
+        if oob:
+            lines.append(
+                f"Out-of-bag coverage: {oob['coverage']:.1%} of training "
+                f"examples ({oob['mean_trees_per_example']:.1f} trees/example)")
         if verbose:
             insp = self.inspect()
             st = insp.stats_summary()

@@ -4,6 +4,8 @@ out-of-bag Self-Evaluation (§3.6).
 """
 from __future__ import annotations
 
+import hashlib
+
 import numpy as np
 
 from repro.core.api import Learner, Task, YdfError, register_learner
@@ -13,6 +15,17 @@ from repro.core.hparams import RFHparams
 from repro.core.models import RandomForestModel, prepare_train_data
 from repro.core.splitters import SplitterParams
 from repro.core.tree import empty_forest, predict_raw
+
+
+def training_data_fingerprint(X: np.ndarray, y: np.ndarray) -> str:
+    """Digest of the encoded feature matrix + labels. The BatchEncoder
+    reproduces ``raw_matrix`` bit-for-bit (tested), so re-encoding the
+    training dataset at analysis time yields the same digest — and any
+    other dataset (even one of equal size) does not."""
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(X, np.float32).tobytes())
+    h.update(np.ascontiguousarray(y, np.float64).tobytes())
+    return h.hexdigest()
 
 
 @register_learner("RANDOM_FOREST")
@@ -131,4 +144,27 @@ class RandomForestLearner(Learner):
         model.training_logs = {"growth_engine": engine_used,
                                "engine_fallback": fallback,
                                "tree_parallelism": block}
+        if self_eval is not None:
+            # surface the OOB result (it was previously reachable only via
+            # self_evaluation) and the per-example coverage
+            model.training_logs["oob"] = {
+                "source": self_eval.source,
+                "n_examples": self_eval.n_examples,
+                "metrics": {k: float(v) for k, v in self_eval.metrics.items()
+                            if isinstance(v, float)},
+                "coverage": float((oob_cnt > 0).mean()),
+                "mean_trees_per_example": float(oob_cnt.mean()),
+            }
+        if hp.compute_oob and hp.bootstrap:
+            # everything needed to REGENERATE the per-tree bootstrap bags
+            # post-hoc (the multinomial draw is the first consumption of each
+            # per-tree rng stream): the OOB permutation-importance engine
+            # (repro/analysis) rebuilds counts from this instead of the model
+            # storing T x N masks. The fingerprint lets that engine verify a
+            # dataset IS the training set (same encoded features + labels),
+            # not merely one of the same size.
+            model.bag_info = {
+                "seed": self.seed & 0xFFFFFFFF, "n_rows": N,
+                "num_trees": hp.num_trees,
+                "fingerprint": training_data_fingerprint(td.X_raw, td.y)}
         return model

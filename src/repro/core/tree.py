@@ -46,6 +46,10 @@ class Forest:
     # oblique extension (all-zero when unused)
     obl_weights: np.ndarray | None = None  # (T, M, P) float32
     obl_features: np.ndarray | None = None # (T, M, P) int32
+    # split gain recorded at training time (analysis §8: SUM_SCORE variable
+    # importance). None on forests predating the field (old pickles); zero on
+    # built/imported forests, whose trees carry no training gains.
+    split_gain: np.ndarray | None = None   # (T, M) float32
     # metadata
     out_dim: int = 1
     tree_class: np.ndarray | None = None  # (T,) int32: GBT multiclass tree->class
@@ -87,44 +91,127 @@ class Forest:
             left_child=sl(self.left_child), leaf_value=sl(self.leaf_value),
             n_nodes=sl(self.n_nodes),
             obl_weights=sl(self.obl_weights), obl_features=sl(self.obl_features),
+            split_gain=sl(self.split_gain),
             tree_class=sl(self.tree_class))
 
     # -------------------------------------------------- structure stats
     def node_counts(self) -> dict:
-        leaves = (self.feature == -1) & _reachable(self)
+        # a leaf is any reachable node without children — including CART-
+        # pruned nodes, which keep their stale condition but no children
+        leaves = (self.left_child < 0) & _reachable(self)
         per_tree = leaves.sum(1)
         return {"n_trees": self.n_trees, "total_nodes": int(self.n_nodes.sum()),
                 "leaves_per_tree_mean": float(per_tree.mean()),
                 "nodes_per_tree_mean": float(self.n_nodes.mean())}
 
     def variable_importances(self) -> dict[str, dict[str, float]]:
-        """NUM_AS_ROOT and NUM_NODES (paper App. B.2)."""
-        reach = _reachable(self)
-        internal = (self.feature >= 0) & reach
-        num_nodes: dict[str, float] = {}
-        num_root: dict[str, float] = {}
-        for name in self.feature_names:
-            num_nodes[name] = 0.0
-            num_root[name] = 0.0
-        flat = self.feature[internal]
-        for f, c in zip(*np.unique(flat, return_counts=True)):
-            if 0 <= f < len(self.feature_names):
-                num_nodes[self.feature_names[f]] = float(c)
+        """Structural variable importances (paper App. B.2), one vectorized
+        pass over the SoA (analysis subsystem, DESIGN.md §8):
+
+          * NUM_NODES          — #splits using the feature
+          * NUM_AS_ROOT        — #trees whose root splits on it
+          * SUM_SCORE          — total split gain (recorded at training time;
+                                 omitted when no gains were recorded)
+          * INV_MEAN_MIN_DEPTH — 1 / (1 + mean over trees of the minimal
+                                 depth at which the feature appears; a tree
+                                 not using the feature contributes its own
+                                 depth). Higher = closer to the roots.
+
+        Every kind is higher-is-more-important so reports can share one
+        sort order. A pruned node (CART: left_child reset to -1 while the
+        stale condition remains) is a leaf and counts toward nothing.
+        """
+        depth = node_depths(self)
+        reach = depth >= 0
+        internal = (self.left_child >= 0) & reach
+        F = len(self.feature_names)
+        name_of = self.feature_names
+
+        def table(counts: np.ndarray) -> dict[str, float]:
+            return {name_of[j]: float(counts[j]) for j in range(F)}
+
+        t_idx, n_idx = np.nonzero(internal)
+        feats = self.feature[t_idx, n_idx]
+        # oblique nodes (feature == -2) reference several columns each
+        if (feats == -2).any() and self.obl_features is not None:
+            ax = feats >= 0
+            obl = feats == -2
+            w = self.obl_weights[t_idx[obl], n_idx[obl]]       # (n_obl, P)
+            fo = self.obl_features[t_idx[obl], n_idx[obl]]
+            live = w != 0.0
+            t_ax = np.concatenate([t_idx[ax], np.repeat(t_idx[obl], live.sum(1))])
+            n_ax = np.concatenate([n_idx[ax], np.repeat(n_idx[obl], live.sum(1))])
+            f_ax = np.concatenate([feats[ax], fo[live]])
+        else:
+            keep = feats >= 0
+            t_ax, n_ax, f_ax = t_idx[keep], n_idx[keep], feats[keep]
+        ok = (f_ax >= 0) & (f_ax < F)
+        t_ax, n_ax, f_ax = t_ax[ok], n_ax[ok], f_ax[ok]
+
+        out = {"NUM_NODES": table(np.bincount(f_ax, minlength=F))}
         roots = self.feature[:, 0]
-        for f, c in zip(*np.unique(roots[roots >= 0], return_counts=True)):
-            num_root[self.feature_names[f]] = float(c)
-        return {"NUM_NODES": num_nodes, "NUM_AS_ROOT": num_root}
+        root_counts = np.bincount(
+            roots[(roots >= 0) & (roots < F)], minlength=F).astype(np.float64)
+        if (roots == -2).any() and self.obl_features is not None:
+            # oblique roots credit every feature they project over, matching
+            # the NUM_NODES / min-depth expansion above
+            ow = self.obl_weights[roots == -2, 0]
+            of = self.obl_features[roots == -2, 0]
+            fr = of[ow != 0.0]
+            root_counts += np.bincount(fr[(fr >= 0) & (fr < F)], minlength=F)
+        out["NUM_AS_ROOT"] = table(root_counts)
+        sg = self.split_gain
+        if sg is not None and len(f_ax) and sg[t_ax, n_ax].any():
+            out["SUM_SCORE"] = table(np.bincount(
+                f_ax, weights=np.maximum(sg[t_ax, n_ax], 0.0), minlength=F))
+        if F:
+            # min depth of each feature per tree; absent -> the tree's depth
+            T = self.n_trees
+            tree_depth = np.maximum(depth.max(axis=1), 0).astype(np.float64)
+            min_depth = np.tile(tree_depth[:, None], (1, F))
+            np.minimum.at(min_depth, (t_ax, f_ax),
+                          depth[t_ax, n_ax].astype(np.float64))
+            out["INV_MEAN_MIN_DEPTH"] = table(
+                1.0 / (1.0 + min_depth.mean(axis=0))) if T else table(
+                np.ones(F))
+        return out
+
+
+def node_depths(forest: Forest) -> np.ndarray:
+    """Per-node depth, (T, M) int32, -1 for unreachable slots: one
+    level-order frontier propagation — O(depth) vectorized passes — shared
+    by every structural accumulator (tree_depths, _reachable, the §8
+    importances). First visit wins, and already-visited children are
+    dropped from the frontier, so a corrupt SoA with a child back-edge
+    (only py_tree validates DAGs) terminates instead of looping."""
+    T, M = forest.feature.shape
+    depth = np.full((T, M), -1, np.int32)
+    if T == 0:
+        return depth
+    depth[:, 0] = 0
+    cur_t = np.arange(T, dtype=np.int64)
+    cur_n = np.zeros(T, np.int64)
+    level = 0
+    while cur_t.size:
+        lc = forest.left_child[cur_t, cur_n]
+        m = (lc >= 0) & (lc + 1 < M)
+        if not m.any():
+            break
+        level += 1
+        ct, cl = cur_t[m], lc[m]
+        fresh = (depth[ct, cl] < 0) & (depth[ct, cl + 1] < 0)
+        ct, cl = ct[fresh], cl[fresh]
+        if not ct.size:
+            break
+        depth[ct, cl] = level
+        depth[ct, cl + 1] = level
+        cur_t = np.concatenate([ct, ct])
+        cur_n = np.concatenate([cl, cl + 1])
+    return depth
 
 
 def _reachable(forest: Forest) -> np.ndarray:
-    reach = np.zeros(forest.feature.shape, bool)
-    reach[:, 0] = True
-    for t in range(forest.n_trees):
-        for i in range(forest.n_nodes[t]):
-            if reach[t, i] and forest.left_child[t, i] >= 0:
-                reach[t, forest.left_child[t, i]] = True
-                reach[t, forest.left_child[t, i] + 1] = True
-    return reach
+    return node_depths(forest) >= 0
 
 
 def empty_forest(n_trees: int, max_nodes: int, out_dim: int, *,
@@ -141,6 +228,7 @@ def empty_forest(n_trees: int, max_nodes: int, out_dim: int, *,
         depth=0,
         obl_weights=np.zeros((T, M, oblique_dims), np.float32) if oblique_dims else None,
         obl_features=np.zeros((T, M, oblique_dims), np.int32) if oblique_dims else None,
+        split_gain=np.zeros((T, M), np.float32),
         out_dim=out_dim,
         tree_class=np.zeros(T, np.int32),
         init_pred=np.zeros(out_dim, np.float32),
@@ -227,9 +315,14 @@ def compile_predict_raw(forest: Forest):
     """One-time specialization of ``predict_raw`` for serving (DESIGN.md §5.1).
 
     Compared to the generic lockstep traversal, compilation:
-      * flattens the (T, M) node tables once, so every round reuses a single
-        (N, T) flat index for the feature/threshold/child gathers instead of
-        rebuilding advanced-index pairs;
+      * flattens the (T, M) node tables once, TRIMMED to the forest's live
+        node capacity (``n_nodes.max()``, like ``pack_by_depth``) — on
+        growers that allocate generous capacity the tables shrink by ~an
+        order of magnitude, so the per-round random gathers stay in cache
+        instead of striding a mostly-padding working set;
+      * clamps leaf/feature indices at compile time and reuses ``np.take``
+        scratch buffers across rounds, so every round is gathers + compares
+        with no per-round index fixup or allocator churn;
       * gathers only the addressed 32-bit mask word per categorical test
         (the generic path materializes the full (N, T, MASK_WORDS) block);
       * drops condition kinds the forest does not use — a pure-numerical
@@ -242,38 +335,69 @@ def compile_predict_raw(forest: Forest):
     """
     if forest.has_oblique():
         return lambda X: predict_raw(forest, X)
-    T, M = forest.n_trees, forest.max_nodes
+    T = forest.n_trees
+    if T == 0:
+        O0 = forest.leaf_value.shape[-1]
+        return lambda X: np.zeros((X.shape[0], 0, O0), np.float32)
+    M = max(1, int(forest.n_nodes.max()))      # live-capacity trim
     depth = max(1, forest.depth)
-    feat_flat = np.ascontiguousarray(forest.feature.ravel())
-    thr_flat = np.ascontiguousarray(forest.threshold.ravel())
-    lc_flat = np.ascontiguousarray(forest.left_child.ravel())
-    # trailing leaf dim can differ from out_dim (GBT multiclass stores
-    # scalar leaves + a tree->class map)
-    leaf_flat = np.ascontiguousarray(
-        forest.leaf_value.reshape(T * M, forest.leaf_value.shape[-1]))
-    off = (np.arange(T, dtype=np.int64) * M)[None, :]          # (1, T)
+    O = forest.leaf_value.shape[-1]
     has_cat = bool(forest.cat_mask.any())
-    if has_cat:
-        is_cat_flat = forest.cat_mask.any(-1).ravel()
-        catw_flat = np.ascontiguousarray(forest.cat_mask.ravel())  # (T*M*W,)
+    # tree-blocked tables (the §5.2 tiling insight restated for the host):
+    # each block's node tables must stay cache-resident through all `depth`
+    # gather rounds, so blocks are sized to ~a few hundred KB of tables
+    TB = int(np.clip(16384 // M, 1, T)) if M else T
+    blocks = []
+    for b0 in range(0, T, TB):
+        k = min(TB, T - b0)
+        sl = slice(b0, b0 + k)
+        # trailing leaf dim can differ from out_dim (GBT multiclass stores
+        # scalar leaves + a tree->class map)
+        blk = {
+            "k": k,
+            "feat": np.ascontiguousarray(
+                np.maximum(forest.feature[sl, :M], 0).astype(np.intp).ravel()),
+            "thr": np.ascontiguousarray(forest.threshold[sl, :M].ravel()),
+            "lc": np.ascontiguousarray(
+                forest.left_child[sl, :M].astype(np.intp).ravel()),
+            "leaf": np.ascontiguousarray(
+                forest.leaf_value[sl, :M].reshape(k * M, O)),
+            "off": (np.arange(k, dtype=np.intp) * M)[None, :],
+        }
+        if has_cat:
+            blk["iscat"] = forest.cat_mask[sl, :M].any(-1).ravel()
+            blk["catw"] = np.ascontiguousarray(forest.cat_mask[sl, :M].ravel())
+        blocks.append(blk)
 
     def run(X: np.ndarray) -> np.ndarray:
         N = X.shape[0]
-        rows = np.arange(N)[:, None]
-        node = np.zeros((N, T), np.int64)
-        for _ in range(depth):
-            idx = node + off                                   # (N, T) flat
-            f = feat_flat[idx]
-            x = X[rows, np.maximum(f, 0)]                      # (N, T)
-            go = x >= thr_flat[idx]
-            if has_cat:
-                code = np.clip(x.astype(np.int64), 0, MASK_WORDS * 32 - 1)
-                word = catw_flat[idx * MASK_WORDS + (code >> 5)]
-                bit = (word >> (code & 31).astype(np.uint32)) & 1
-                go = np.where(is_cat_flat[idx], bit.astype(bool), go)
-            lc = lc_flat[idx]
-            node = np.where(lc >= 0, lc + go, node)
-        return leaf_flat[node + off]                           # (N, T, O)
+        Xf = np.ascontiguousarray(X, np.float32).ravel()
+        row_base = (np.arange(N, dtype=np.intp) * X.shape[1])[:, None]
+        out = np.empty((N, T, O), np.float32)
+        c0 = 0
+        for blk in blocks:
+            k, off = blk["k"], blk["off"]
+            node = np.zeros((N, k), np.intp)
+            idx = np.empty((N, k), np.intp)
+            gat = np.empty((N, k), np.intp)   # shared int gather scratch
+            x = np.empty((N, k), np.float32)
+            for _ in range(depth):
+                np.add(node, off, out=idx)                     # (N, k) flat
+                blk["feat"].take(idx, out=gat)
+                np.add(gat, row_base, out=gat)
+                Xf.take(gat, out=x)
+                go = x >= blk["thr"].take(idx)
+                if has_cat:
+                    code = np.clip(x.astype(np.intp), 0, MASK_WORDS * 32 - 1)
+                    word = blk["catw"].take(idx * MASK_WORDS + (code >> 5))
+                    bit = (word >> (code & 31).astype(np.uint32)) & 1
+                    go = np.where(blk["iscat"].take(idx),
+                                  bit.astype(bool), go)
+                blk["lc"].take(idx, out=gat)
+                node = np.where(gat >= 0, gat + go, node)
+            out[:, c0:c0 + k] = blk["leaf"][node + off]
+            c0 += k
+        return out                                             # (N, T, O)
 
     return run
 
@@ -281,28 +405,13 @@ def compile_predict_raw(forest: Forest):
 # ------------------------------------------------- depth-packed layout (§5.3)
 
 def tree_depths(forest: Forest) -> np.ndarray:
-    """Per-tree depth, (T,) int32, by level-order frontier propagation: each
-    pass expands every frontier node of every tree at once, so the cost is
-    O(depth) vectorized passes over O(total nodes) work — flat host time
-    even for the arbitrarily-large forests the tiled kernel accepts."""
-    T = forest.n_trees
-    depths = np.zeros(T, np.int32)
-    if T == 0:
-        return depths
-    cur_t = np.arange(T, dtype=np.int64)   # frontier (tree, node) pairs
-    cur_n = np.zeros(T, np.int64)
-    level = 0
-    while cur_t.size:
-        lc = forest.left_child[cur_t, cur_n]
-        m = lc >= 0
-        if not m.any():
-            break
-        level += 1
-        ct, cl = cur_t[m], lc[m]
-        depths[ct] = level                  # deepest level seen so far wins
-        cur_t = np.concatenate([ct, ct])
-        cur_n = np.concatenate([cl, cl + 1])
-    return depths
+    """Per-tree depth, (T,) int32: the deepest reachable level of each tree
+    (one ``node_depths`` level-order pass — O(depth) vectorized passes over
+    O(total nodes) work, flat host time even for the arbitrarily-large
+    forests the tiled kernel accepts)."""
+    if forest.n_trees == 0:
+        return np.zeros(0, np.int32)
+    return np.maximum(node_depths(forest).max(axis=1), 0).astype(np.int32)
 
 
 @dataclass

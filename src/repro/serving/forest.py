@@ -58,6 +58,24 @@ class ForestServeBundle:
     def predict(self, batch) -> np.ndarray:
         return self.predict_encoded(self.predictor.encode(batch))
 
+    def predict_encoded_bulk(self, X: np.ndarray,
+                             chunk_rows: int | None = None) -> np.ndarray:
+        """Dispatch one LARGE encoded batch — an analysis replica sweep
+        (DESIGN.md §8: permuted copies, PDP grid x sample cross products) —
+        through the bucket ladder: ``chunk_rows`` is rounded DOWN to a
+        multiple of the top bucket, so every full chunk dispatches at one
+        exact ladder shape with zero padding and only the final partial
+        chunk pads to its bucket — a jit'd engine traces at most one
+        beyond-the-ladder shape for the whole sweep."""
+        n = X.shape[0]
+        top = self.buckets[-1]
+        step = (top if chunk_rows is None
+                else max(top, chunk_rows - chunk_rows % top))
+        if n <= step:
+            return self.predict_encoded(X)
+        return np.concatenate([self.predict_encoded(X[i:i + step])
+                               for i in range(0, n, step)], axis=0)
+
 
 def make_forest_server(model, engine: str | None = None,
                        buckets: tuple[int, ...] = DEFAULT_BUCKETS,

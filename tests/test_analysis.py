@@ -1,0 +1,395 @@
+"""Model-analysis subsystem (DESIGN.md §8): structural / permutation / OOB
+variable importances, partial dependence, report objects, and the
+batched-replica dispatch contract (stacked replicas through the compiled
+serving path == a naive per-feature loop, bit for bit).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    analyze_model,
+    oob_permutation_importances,
+    partial_dependence,
+    permutation_importances,
+    structural_importances,
+)
+from repro.analysis.importance import _permutation
+from repro.analysis.report import sparkline
+from repro.core import (
+    CartLearner,
+    GradientBoostedTreesLearner,
+    RandomForestLearner,
+    Task,
+    YdfError,
+)
+from repro.core.dataspec import label_values
+from repro.core.tree import node_depths
+
+LEARNERS = {
+    # ALL candidate attributes: per-node sqrt-sampling would randomize which
+    # feature reaches the roots of a 10-tree forest, muddying min-depth ranks
+    "rf": lambda label, task: RandomForestLearner(
+        label=label, task=task, num_trees=10, max_depth=8,
+        num_candidate_attributes="ALL"),
+    "gbt": lambda label, task: GradientBoostedTreesLearner(
+        label=label, task=task, num_trees=20, max_depth=4),
+    "cart": lambda label, task: CartLearner(label=label, task=task),
+}
+
+
+def planted_dataset(n=700, noise_feats=4, task=Task.CLASSIFICATION, seed=0):
+    """One informative feature (x0) + pure-noise features: every importance
+    engine must put x0 first."""
+    rng = np.random.default_rng(seed)
+    x0 = rng.normal(size=n)
+    data = {"x0": x0.astype(object)}
+    for j in range(noise_feats):
+        data[f"noise{j}"] = rng.normal(size=n).astype(object)
+    if task == Task.CLASSIFICATION:
+        y = np.where(x0 + 0.2 * rng.normal(size=n) > 0, "pos", "neg")
+        data["label"] = y.astype(object)
+    else:
+        data["label"] = (3.0 * x0 + 0.1 * rng.normal(size=n)).astype(object)
+    return data
+
+
+@pytest.fixture(scope="module")
+def planted_cls():
+    return planted_dataset(task=Task.CLASSIFICATION)
+
+
+@pytest.fixture(scope="module")
+def planted_reg():
+    return planted_dataset(task=Task.REGRESSION, seed=1)
+
+
+@pytest.fixture(scope="module")
+def rf_cls(planted_cls):
+    return LEARNERS["rf"]("label", Task.CLASSIFICATION).train(planted_cls)
+
+
+# ----------------------------------------------------- structural importances
+
+@pytest.mark.parametrize("learner", ["rf", "gbt", "cart"])
+@pytest.mark.parametrize("task", [Task.CLASSIFICATION, Task.REGRESSION])
+def test_structural_planted_signal(learner, task, planted_cls, planted_reg):
+    data = planted_cls if task == Task.CLASSIFICATION else planted_reg
+    model = LEARNERS[learner]("label", task).train(data)
+    vi = model.variable_importances()
+    for kind in ("NUM_NODES", "SUM_SCORE", "INV_MEAN_MIN_DEPTH"):
+        assert kind in vi, (learner, task, sorted(vi))
+        best = max(vi[kind], key=vi[kind].get)
+        assert best == "x0", (learner, task, kind, vi[kind])
+
+
+def test_structural_matches_inspector_oracle(rf_cls):
+    """The single vectorized SoA pass vs a typed-tree traversal oracle."""
+    feats = rf_cls.features
+    num_nodes = {f: 0.0 for f in feats}
+    num_root = {f: 0.0 for f in feats}
+    min_depth_sum = {f: 0.0 for f in feats}
+    trees = rf_cls.inspect().trees()
+    for tr in trees:
+        tree_min = {}
+        for node, d in tr.iter_nodes():
+            if node.is_leaf:
+                continue
+            name = feats[node.condition.feature]
+            num_nodes[name] += 1
+            if d == 0:
+                num_root[name] += 1
+            tree_min[name] = min(tree_min.get(name, tr.depth), d)
+        for f in feats:
+            min_depth_sum[f] += tree_min.get(f, tr.depth)
+    vi = rf_cls.variable_importances()
+    assert vi["NUM_NODES"] == num_nodes
+    assert vi["NUM_AS_ROOT"] == num_root
+    for f in feats:
+        inv = 1.0 / (1.0 + min_depth_sum[f] / len(trees))
+        assert vi["INV_MEAN_MIN_DEPTH"][f] == pytest.approx(inv)
+
+
+def test_split_gain_recorded_on_internal_nodes_only(rf_cls):
+    forest = rf_cls.forest
+    depth = node_depths(forest)
+    internal = (forest.left_child >= 0) & (depth >= 0)
+    assert (forest.split_gain[internal] > 0).any()
+    assert not forest.split_gain[~internal].any()
+    # truncation slices the gain table with the rest of the SoA
+    assert forest.truncated(3).split_gain.shape[0] == 3
+
+
+def test_structural_importances_with_oblique_splits(planted_cls):
+    m = GradientBoostedTreesLearner(label="label", num_trees=4,
+                                    template="benchmark_rank1").train(planted_cls)
+    vi = m.variable_importances()
+    assert sum(vi["NUM_NODES"].values()) > 0  # oblique nodes count features
+    # oblique ROOTS credit their projected features too (table consistency)
+    assert sum(vi["NUM_AS_ROOT"].values()) > 0
+
+
+def test_node_depths_terminates_on_corrupt_back_edge():
+    """A child back-edge (only py_tree validates DAGs) must terminate the
+    structural pass, not loop forever like an unbounded frontier would."""
+    from repro.core.tree import empty_forest
+    f = empty_forest(1, 8, 1)
+    f.feature[0, 0] = 0
+    f.left_child[0, 0] = 1
+    f.feature[0, 1] = 0
+    f.left_child[0, 1] = 0          # points back at the root
+    f.n_nodes[0] = 3
+    f.depth = 2
+    d = node_depths(f)
+    assert d[0, 0] == 0 and d[0, 1] == 1 and d[0, 2] == 1
+    f.node_counts()                  # must not hang either
+
+
+# ---------------------------------------------------- permutation importances
+
+@pytest.mark.parametrize("learner", ["rf", "gbt", "cart"])
+@pytest.mark.parametrize("task", [Task.CLASSIFICATION, Task.REGRESSION])
+def test_permutation_planted_signal(learner, task, planted_cls, planted_reg):
+    data = planted_cls if task == Task.CLASSIFICATION else planted_reg
+    model = LEARNERS[learner]("label", task).train(data)
+    table, baseline = permutation_importances(model, data, repetitions=2)
+    assert table.ranking()[0] == "x0"
+    e = table.entries[0]
+    assert e.importance > 0
+    assert e.ci95[0] <= e.importance <= e.ci95[1]
+    assert baseline.n_examples == len(data["label"])
+
+
+def test_batched_replicas_equal_naive_per_feature_loop(rf_cls, planted_cls):
+    """The stacked-replica dispatch must reproduce a naive python loop that
+    predicts one permuted copy at a time — same permutations, same engine,
+    identical scores."""
+    model, data = rf_cls, planted_cls
+    reps = 2
+    table, baseline = permutation_importances(model, data, repetitions=reps,
+                                              row_budget=1500)  # forces chunking
+    pred = model.predictor()
+    X = pred.encode(data)
+    y = label_values(model, data)
+    N = len(y)
+    base_acc = float((np.asarray(pred.predict_encoded(X)).argmax(1) == y).mean())
+    assert baseline["accuracy"] == pytest.approx(base_acc)
+    for j, name in enumerate(model.features):
+        drops = []
+        for r in range(reps):
+            Xp = X.copy()
+            Xp[:, j] = X[_permutation(42, j, r, N), j]
+            acc = float((np.asarray(pred.predict_encoded(Xp)).argmax(1) == y).mean())
+            drops.append(base_acc - acc)
+        assert table[name] == pytest.approx(np.mean(drops), abs=1e-12), name
+
+
+def test_permutation_through_serving_bundle(rf_cls, planted_cls):
+    from repro.serving.forest import make_forest_server
+    bundle = make_forest_server(rf_cls, buckets=(64, 256))
+    t_direct, _ = permutation_importances(rf_cls, planted_cls, repetitions=1)
+    t_bundle, _ = permutation_importances(rf_cls, planted_cls, repetitions=1,
+                                          bundle=bundle)
+    for e in t_direct.entries:
+        assert t_bundle[e.feature] == pytest.approx(e.importance, abs=1e-12)
+
+
+def test_bundle_bulk_dispatch_matches_predictor(rf_cls, planted_cls):
+    from repro.serving.forest import make_forest_server
+    bundle = make_forest_server(rf_cls, buckets=(32, 128))
+    X = rf_cls.predictor().encode(planted_cls)
+    big = np.tile(X, (3, 1))  # > top bucket: chunked dispatch
+    np.testing.assert_array_equal(
+        bundle.predict_encoded_bulk(big),
+        np.asarray(rf_cls.predictor().predict_encoded(big)))
+
+
+# ------------------------------------------------------------ OOB importances
+
+def test_oob_baseline_reproduces_training_self_evaluation(rf_cls, planted_cls):
+    table, baseline = oob_permutation_importances(rf_cls, planted_cls)
+    se = rf_cls.self_evaluation
+    assert se is not None and se.source == "out-of-bag"
+    assert baseline.n_examples == se.n_examples
+    assert baseline["accuracy"] == pytest.approx(se["accuracy"])
+    assert table.ranking()[0] == "x0"
+    assert table.baseline == pytest.approx(se["accuracy"])
+
+
+def test_oob_regression_planted_signal(planted_reg):
+    m = RandomForestLearner(label="label", task=Task.REGRESSION,
+                            num_trees=10, max_depth=8).train(planted_reg)
+    table, baseline = oob_permutation_importances(m, planted_reg)
+    assert table.ranking()[0] == "x0"
+    assert baseline["rmse"] == pytest.approx(m.self_evaluation["rmse"])
+
+
+def test_oob_requires_exact_training_dataset(rf_cls, planted_cls):
+    small = {k: v[:100] for k, v in planted_cls.items()}
+    with pytest.raises(YdfError, match="exact training dataset"):
+        oob_permutation_importances(rf_cls, small)
+
+
+def test_oob_rejects_same_size_different_content(rf_cls):
+    """The content fingerprint catches what a row-count check cannot: a
+    non-training dataset of exactly the training size."""
+    other = planted_dataset(n=700, task=Task.CLASSIFICATION, seed=77)
+    with pytest.raises(YdfError, match="different content"):
+        oob_permutation_importances(rf_cls, other)
+    rep = rf_cls.analyze(other, permutation_repetitions=1, sample_rows=32)
+    assert all(t.kind != "OOB_MEAN_DECREASE_ACCURACY"
+               for t in rep.importances)
+    assert any("skipped" in n for n in rep.notes)
+
+
+def test_analyze_oob_true_requires_labeled_dataset(rf_cls, planted_cls):
+    with pytest.raises(YdfError, match="oob=True"):
+        rf_cls.analyze(oob=True)
+    feats_only = {k: v for k, v in planted_cls.items() if k != "label"}
+    with pytest.raises(YdfError, match="absent"):
+        rf_cls.analyze(feats_only, oob=True)
+
+
+def test_analyze_forwards_repetitions_to_oob(rf_cls, planted_cls):
+    rep = rf_cls.analyze(planted_cls, permutation_repetitions=2,
+                         sample_rows=32, grid_size=4)
+    assert rep.importance("OOB_MEAN_DECREASE_ACCURACY").repetitions == 2
+
+
+def test_compile_predict_raw_empty_forest():
+    from repro.core.tree import compile_predict_raw, empty_forest
+    run = compile_predict_raw(empty_forest(3, 8, 1).truncated(0))
+    assert run(np.zeros((5, 2), np.float32)).shape == (5, 0, 1)
+
+
+def test_oob_requires_bag_info(planted_cls):
+    m = RandomForestLearner(label="label", num_trees=4,
+                            bootstrap=False).train(planted_cls)
+    with pytest.raises(YdfError, match="bootstrap"):
+        oob_permutation_importances(m, planted_cls)
+
+
+# --------------------------------------------------------- partial dependence
+
+def test_pdp_monotone_on_monotone_target():
+    rng = np.random.default_rng(3)
+    n = 800
+    x0 = rng.uniform(-2, 2, n)
+    data = {"x0": x0.astype(object),
+            "noise0": rng.normal(size=n).astype(object),
+            "label": (2.0 * x0).astype(object)}
+    m = GradientBoostedTreesLearner(label="label", task=Task.REGRESSION,
+                                    num_trees=60).train(data)
+    [curve] = partial_dependence(m, data, features=["x0"], grid_size=12)
+    c = curve.curve()
+    span = c.max() - c.min()
+    assert c[-1] > c[0] and span > 1.0
+    assert (np.diff(c) >= -0.02 * span).all()  # monotone up to fit noise
+
+
+def test_pdp_categorical_uses_vocab_labels(tiny_adult):
+    m = RandomForestLearner(label="income", num_trees=5,
+                            max_depth=6).train(tiny_adult)
+    [curve] = partial_dependence(m, tiny_adult, features=["workclass"],
+                                 grid_size=8, sample_rows=50)
+    assert curve.semantic == "CATEGORICAL"
+    vocab = m.spec["workclass"].vocab
+    assert curve.labels and all(l in vocab for l in curve.labels)
+    assert curve.mean.shape == (len(curve.grid), len(m.classes))
+    assert curve.n_sample == 50
+
+
+def test_pdp_ice_shapes(rf_cls, planted_cls):
+    [curve] = partial_dependence(rf_cls, planted_cls, features=["x0"],
+                                 grid_size=6, sample_rows=40, ice=True)
+    g = len(curve.grid)
+    assert curve.ice.shape == (g, 40, 2)
+    np.testing.assert_allclose(curve.ice.mean(axis=1), curve.mean)
+
+
+# ------------------------------------------------------------ report / API
+
+def test_analyze_report_text_and_json(rf_cls, planted_cls):
+    rep = rf_cls.analyze(planted_cls, permutation_repetitions=1,
+                         sample_rows=64, grid_size=6)
+    txt = rep.report()
+    assert "MEAN_DECREASE_ACCURACY" in txt and "Partial dependence" in txt
+    assert str(rep) == txt
+    payload = json.loads(json.dumps(rep.to_dict()))
+    kinds = [t["kind"] for t in payload["variable_importances"]]
+    assert "NUM_NODES" in kinds and "OOB_MEAN_DECREASE_ACCURACY" in kinds
+    assert payload["evaluation"]["metrics"]["accuracy"] > 0.5
+    assert len(payload["partial_dependence"]) == len(rf_cls.features)
+    # accessors
+    assert rep.importance("NUM_NODES").ranking()[0] == "x0"
+    assert rep.pdp_curve("x0").feature == "x0"
+
+
+def test_analyze_structure_only(rf_cls):
+    rep = rf_cls.analyze()
+    assert rep.evaluation is None and not rep.pdp
+    assert {t.kind for t in rep.importances} >= {"NUM_NODES", "SUM_SCORE"}
+
+
+def test_analyze_without_label_skips_permutation(rf_cls, planted_cls):
+    feats_only = {k: v for k, v in planted_cls.items() if k != "label"}
+    rep = rf_cls.analyze(feats_only, sample_rows=32)
+    assert rep.evaluation is None
+    assert all(t.source == "structure" for t in rep.importances)
+    assert rep.pdp and any("label" in n for n in rep.notes)
+
+
+def test_evaluate_caches_and_save_writes_report(rf_cls, planted_cls, tmp_path):
+    path = str(tmp_path / "m")
+    rf_cls.save(path)
+    assert not os.path.exists(os.path.join(path, "evaluation.txt"))
+    ev = rf_cls.evaluate(planted_cls)
+    rf_cls.save(path)
+    with open(os.path.join(path, "evaluation.txt")) as f:
+        assert f"accuracy: {ev['accuracy']:.6g}" in f.read()
+    with open(os.path.join(path, "evaluation.json")) as f:
+        assert json.load(f)["metrics"]["accuracy"] == ev["accuracy"]
+
+
+def test_cli_analyze_and_evaluate_json(rf_cls, planted_cls, tmp_path, capsys):
+    from repro.cli import main
+    from repro.data.io import write_dataset
+    mdir = str(tmp_path / "model")
+    rf_cls.save(mdir)
+    csv = "csv:" + str(tmp_path / "d.csv")
+    write_dataset(planted_cls, csv)
+    out_json = str(tmp_path / "report.json")
+    main(["analyze", "--model", mdir, "--dataset", csv, "--repetitions", "1",
+          "--sample", "32", "--output", out_json])
+    with open(out_json) as f:
+        payload = json.load(f)
+    assert payload["label"] == "label"
+    assert any(t["kind"] == "MEAN_DECREASE_ACCURACY"
+               for t in payload["variable_importances"])
+    main(["analyze", "--model", mdir])  # structural-only, text
+    assert "NUM_NODES" in capsys.readouterr().out
+    main(["evaluate", "--model", mdir, "--dataset", csv, "--json"])
+    assert json.loads(capsys.readouterr().out)["metrics"]["accuracy"] > 0.5
+
+
+def test_sparkline():
+    assert sparkline([0, 1]) == "▁█"
+    assert sparkline([1, 1, 1]) == "▁▁▁"
+    assert sparkline([]) == ""
+    assert len(sparkline(np.arange(10))) == 10
+
+
+# --------------------------------------------------------------- slow matrix
+
+@pytest.mark.slow
+@pytest.mark.parametrize("engine", ["vectorized", "naive"])
+def test_permutation_engine_agnostic(rf_cls, planted_cls, engine):
+    """Importance scores are an engine-independent model property."""
+    rf_cls.compile(engine)
+    table, _ = permutation_importances(rf_cls, planted_cls, repetitions=1)
+    rf_cls.compile("vectorized")
+    ref, _ = permutation_importances(rf_cls, planted_cls, repetitions=1)
+    for e in ref.entries:
+        assert table[e.feature] == pytest.approx(e.importance, abs=1e-6)
