@@ -12,6 +12,9 @@
   analyze_bench   — DESIGN.md §8 permutation importance: compiled
                     batched-replica path vs naive per-feature loop
                     (BENCH_analyze.json when run as a module; quick here)
+  serve_bench     — DESIGN.md §9 fault-tolerant front-end: p50/p99 latency
+                    vs offered QPS, clean vs fault-injected
+                    (BENCH_serve.json when run as a module; --quick here)
   distributed_df  — §3.9 traffic scaling
   roofline_report — assignment §Roofline/§Dry-run tables (from results/)
 """
@@ -27,7 +30,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import accuracy_rank, analyze_bench, distributed_df, \
-        engines_bench, infer_bench, speed, train_bench
+        engines_bench, infer_bench, serve_bench, speed, train_bench
 
     t_all = time.time()
     if "speed" not in args.skip:
@@ -50,6 +53,16 @@ def main() -> None:
         print(f"  headline: {res['headline_speedup']:.2f}x compiled "
               "vectorized vs seed per-call path "
               "(full 100k-row run: python -m benchmarks.infer_bench)")
+    if "serve" not in args.skip:
+        print("== fault-tolerant serving front-end (DESIGN.md §9) ==",
+              flush=True)
+        res = serve_bench.run(qps_levels=(200, 800, 2400), duration_s=0.5,
+                              num_trees=10)
+        top = res["levels"]["2400"]
+        print(f"  headline: p99 {top['clean']['p99_ms']} ms clean / "
+              f"{top['faults']['p99_ms']} ms under injected faults at "
+              "2400 offered qps (full sweep: python -m "
+              "benchmarks.serve_bench)")
     if "analyze" not in args.skip:
         print("== model analysis (DESIGN.md §8) ==", flush=True)
         res = analyze_bench.run(rows=400, num_trees=30, max_depth=8,

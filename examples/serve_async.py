@@ -1,0 +1,90 @@
+"""Fault-tolerant serving walkthrough: deadlines, admission control, engine
+degradation, and the deterministic fault harness (DESIGN.md §9; CPU-runnable).
+
+    PYTHONPATH=src python examples/serve_async.py
+"""
+import asyncio
+
+import numpy as np
+
+from repro.core import GradientBoostedTreesLearner, RandomForestLearner, Task
+from repro.data.tabular import adult_like, train_test_split
+from repro.serving import (
+    AsyncForestServer,
+    FakeClock,
+    FaultPlan,
+    ForestServer,
+    RequestShed,
+    RetryPolicy,
+)
+
+# 1. train two models — the server routes requests between them by name
+train, test = train_test_split(adult_like(4000), 0.3, seed=1)
+income = GradientBoostedTreesLearner(label="income", num_trees=30).train(train)
+age = RandomForestLearner(label="age", task=Task.REGRESSION, num_trees=10,
+                          max_depth=8).train(train)
+request = {k: v for k, v in test.items() if k != "income"}
+
+# 2. a ForestServer compiles a DEGRADATION CHAIN per model (primary engine
+#    first, simpler fallbacks behind circuit breakers) and serves requests
+#    under per-request deadlines with EWMA admission control
+server = ForestServer({"income": income, "age": age},
+                      buckets=(32, 128, 512), default_deadline_s=0.25,
+                      retry=RetryPolicy(max_attempts=3, base_s=1e-3, seed=0),
+                      failure_threshold=3, cooldown_s=0.1, warmup=True)
+print("engine chains:",
+      {m: [e["engine"] for e in server.engine_status(m)]
+       for m in server.models()})
+
+probs = server.predict({k: v[:5] for k, v in request.items()}, model="income")
+years = server.predict({k: v[:5] for k, v in test.items()}, model="age")
+print(f"routed: p(>50K)[:3]={np.round(probs[:3, 1], 3)}, "
+      f"age[:3]={np.round(years[:3], 1)}\n")
+
+# 3. async front-end: concurrent awaiters micro-batch into shared padded
+#    dispatches; sheds and timeouts surface as typed exceptions per future
+async def fan_in():
+    async with AsyncForestServer(server, flush_interval_s=0.002) as aserver:
+        jobs = [aserver.predict({k: v[i:i + 8] for k, v in request.items()},
+                                model="income") for i in range(0, 160, 8)]
+        return await asyncio.gather(*jobs, return_exceptions=True)
+
+results = asyncio.run(fan_in())
+ok = sum(isinstance(r, np.ndarray) for r in results)
+print(f"async fan-in: {ok}/{len(results)} requests served "
+      f"({server.metrics.dispatches} padded dispatches total)\n")
+
+# 4. the deterministic fault harness: a seeded FaultPlan kills the primary
+#    engine for a while. Watch the circuit open (traffic degrades to the
+#    fallback engine — SAME bits), then a half-open probe restore it.
+clock = FakeClock()
+faulty = ForestServer(income, buckets=(32,), default_deadline_s=None,
+                      failure_threshold=2, cooldown_s=1.0,
+                      clock=clock.now, sleep=clock.sleep)
+wrapper = faulty.inject_faults(FaultPlan(dead_from=0, dead_until=3))
+req8 = {k: v[:8] for k, v in request.items()}
+clean = income.predict(req8)
+for step in range(5):
+    out = faulty.predict(req8)
+    assert np.array_equal(out, clean)      # degradation is invisible in bits
+    state = faulty.engine_status()[0]["circuit"]
+    print(f"  dispatch {step}: primary circuit={state:9s} "
+          f"(primary calls so far: {wrapper.calls})")
+    if state == "open":
+        clock.advance(1.5)                 # cooldown -> half-open probe next
+print()
+
+# 5. overload: a slow engine (injected latency teaches the EWMA estimator a
+#    real service rate) + deadlines the queue cannot meet -> requests are
+#    SHED at admission (loud, cheap), not timed out after wasted work
+faulty.inject_faults(FaultPlan(latency_rate=1.0, latency_s=0.05))
+faulty.predict(req8)                       # EWMA learns ~50 ms / dispatch
+shed = 0
+for i in range(50):
+    try:
+        faulty.submit(req8, deadline_s=0.02, pump=False)
+    except RequestShed:
+        shed += 1
+faulty.pump()
+print(f"overload: {shed}/50 tight-deadline requests shed at admission\n")
+print(faulty.metrics.summary())

@@ -11,6 +11,9 @@
         [--json] [--output=report.json] [--repetitions=3] [--sample=256]
   python -m repro.cli predict  --dataset=csv:test.csv --model=/tmp/model \
         --output=csv:predictions.csv
+  python -m repro.cli serve    --dataset=csv:requests.csv --model=/tmp/model \
+        [--deadline-ms=50] [--request-rows=32] [--engines=vectorized,naive] \
+        [--output=csv:predictions.csv] [--json]
   python -m repro.cli benchmark_inference --dataset=csv:test.csv --model=/tmp/model
 
 Training configurations are cross-API compatible (§3.10): a model trained
@@ -145,6 +148,60 @@ def cmd_predict(args):
     print(f"{len(pred)} predictions written to {args.output}")
 
 
+def cmd_serve(args):
+    """Batch-score a dataset through the fault-tolerant ForestServer
+    (DESIGN.md §9) and print the serving-metrics summary. Rows ride as
+    deadline-bounded requests through admission control, retries and the
+    engine-degradation chain — sheds and timeouts surface as NaN rows in
+    the output and as counters in the summary, never as silent gaps."""
+    from repro.core import Model, Task
+    from repro.data.io import read_dataset, write_dataset
+    from repro.serving.server import ForestServer, RequestShed, YdfError
+    model = Model.load(args.model)
+    data = read_dataset(args.dataset)
+    data.pop(model.label, None)          # serving requests carry features only
+    n = len(next(iter(data.values())))
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms else None
+    engines = args.engines.split(",") if args.engines else None
+    srv = ForestServer(model, engines=engines,
+                       default_deadline_s=deadline_s, warmup=True)
+    step = max(1, args.request_rows)
+    spans, tickets = [], []
+    for lo in range(0, n, step):
+        req = {k: v[lo:lo + step] for k, v in data.items()}
+        try:
+            tickets.append(srv.submit(req))
+        except RequestShed:
+            tickets.append(None)
+        spans.append((lo, min(lo + step, n)))
+    srv.pump()
+    out = np.full((n,) + tuple(srv._state(None).bundle(0).predictor.out_shape),
+                  np.nan, np.float32)
+    for t, (lo, hi) in zip(tickets, spans):
+        if t is None:
+            continue
+        try:
+            out[lo:hi] = srv.result(t)
+        except YdfError:
+            pass                         # timed out / failed: NaN rows, counted
+    if args.output:
+        if model.task == Task.CLASSIFICATION:
+            cols = {f"p_{c}": out[:, i] for i, c in enumerate(model.classes)}
+        else:
+            cols = {"prediction": out.reshape(n)}
+        write_dataset(cols, args.output)
+        print(f"{n} rows scored to {args.output}")
+    chain = " -> ".join(f"{e['engine']}[{e['circuit']}]"
+                        for e in srv.engine_status())
+    print(f"served {len(spans)} requests x {step} rows "
+          f"(deadline {'none' if deadline_s is None else f'{args.deadline_ms:g} ms'}, "
+          f"engine chain {chain})")
+    if args.json:
+        print(json.dumps(srv.metrics.to_dict(), indent=1))
+    else:
+        print(srv.metrics.summary())
+
+
 def cmd_benchmark_inference(args):
     from repro.core import Model
     from repro.core.engines import benchmark_inference
@@ -221,6 +278,21 @@ def main(argv=None):
     p.add_argument("--model", required=True)
     p.add_argument("--output", required=True)
     p.set_defaults(fn=cmd_predict)
+
+    p = sub.add_parser("serve")
+    p.add_argument("--dataset", required=True)
+    p.add_argument("--model", required=True)
+    p.add_argument("--output", help="write predictions (csv:/json: path); "
+                                    "shed/timed-out rows are NaN")
+    p.add_argument("--deadline-ms", dest="deadline_ms", type=float, default=0,
+                   help="per-request deadline in ms (0 = no deadline)")
+    p.add_argument("--request-rows", dest="request_rows", type=int, default=32,
+                   help="rows per simulated request")
+    p.add_argument("--engines", help="comma-separated degradation chain, "
+                                     "e.g. vectorized,naive")
+    p.add_argument("--json", action="store_true",
+                   help="dump the serving metrics as JSON instead of text")
+    p.set_defaults(fn=cmd_serve)
 
     p = sub.add_parser("benchmark_inference")
     p.add_argument("--dataset", required=True)

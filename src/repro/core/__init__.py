@@ -7,6 +7,7 @@ Public API (Learner–Model abstraction, §3.1):
     print(model.evaluate(test_ds).report())
 """
 from repro.core.api import (  # noqa: F401
+    EngineFailure,
     Learner,
     Model,
     Task,

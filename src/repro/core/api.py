@@ -38,6 +38,25 @@ class YdfError(ValueError):
     """An error with directions (paper Table 1b style)."""
 
 
+class EngineFailure(YdfError):
+    """A typed inference-engine failure (DESIGN.md §9.1).
+
+    Raised when a compiled engine call fails *at serving time* — a kernel
+    dispatch error, a device fault, an injected fault from the test harness
+    (serving/faults.py). Carries the engine name so the serving front-end
+    (serving/server.py) can attribute the failure to a circuit breaker, and
+    ``transient`` so it knows whether a retry on the same engine is worth
+    attempting (timeouts, spurious device errors) or the engine should be
+    treated as down (sticky death, incompatibility discovered late).
+    """
+
+    def __init__(self, message: str, *, engine: str = "?",
+                 transient: bool = False):
+        super().__init__(message)
+        self.engine = engine
+        self.transient = transient
+
+
 # --------------------------------------------------------------------- Model
 
 class Model(abc.ABC):

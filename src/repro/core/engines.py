@@ -33,7 +33,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.api import YdfError
+from repro.core.api import EngineFailure, YdfError
 from repro.core.dataspec import BatchEncoder
 from repro.core.tree import Forest, compile_predict_raw, predict_naive
 
@@ -107,6 +107,10 @@ class CompiledPredictor:
     encoder: BatchEncoder
     finalize: Callable[[np.ndarray], np.ndarray]
     compile_s: float = 0.0
+    # trailing shape of one prediction — () for regression, (n_classes,) for
+    # classification. Lets a zero-row dispatch return a correctly-shaped
+    # empty array without running the engine (serving/forest.py).
+    out_shape: tuple = ()
 
     @property
     def name(self) -> str:
@@ -116,10 +120,23 @@ class CompiledPredictor:
         return self.encoder.encode(dataset)
 
     def per_tree(self, X: np.ndarray) -> np.ndarray:
-        return self.engine.per_tree(X)
+        # engine failures surface TYPED (DESIGN.md §9.1): the serving
+        # front-end routes EngineFailure into retry / circuit-breaker logic,
+        # while schema errors (encode) stay YdfError and reach the caller
+        try:
+            return self.engine.per_tree(X)
+        except (EngineFailure, KeyboardInterrupt):
+            raise
+        except Exception as e:
+            raise EngineFailure(
+                f"engine {self.name!r} failed on a batch of "
+                f"{len(X)} rows: {type(e).__name__}: {e}",
+                engine=self.name) from e
 
     def predict_encoded(self, X: np.ndarray) -> np.ndarray:
-        return self.finalize(np.asarray(self.engine.per_tree(X)))
+        if len(X) == 0:
+            return np.zeros((0,) + self.out_shape, np.float32)
+        return self.finalize(np.asarray(self.per_tree(X)))
 
     def predict(self, dataset) -> np.ndarray:
         return self.predict_encoded(self.encode(dataset))
@@ -134,9 +151,16 @@ def compile_predictor(model, engine: str | None = None) -> CompiledPredictor:
     encoder = BatchEncoder(model.spec, model.features)
     # _compile_finalize returns a closure over the needed fields only — a
     # bound model method would cycle Model <-> predictor (models.py)
+    finalize = model._compile_finalize()
+    # probe the output head on a zero per-tree stack to learn the trailing
+    # prediction shape — no engine call, so it is free even for jit'd engines
+    probe = finalize(np.zeros(
+        (1, model.forest.n_trees, model.forest.leaf_value.shape[-1]),
+        np.float32))
     return CompiledPredictor(engine=eng, encoder=encoder,
-                             finalize=model._compile_finalize(),
-                             compile_s=time.perf_counter() - t0)
+                             finalize=finalize,
+                             compile_s=time.perf_counter() - t0,
+                             out_shape=tuple(np.asarray(probe).shape[1:]))
 
 
 def benchmark_inference(model, dataset, *, repetitions: int = 5) -> str:

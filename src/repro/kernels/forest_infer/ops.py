@@ -80,19 +80,35 @@ def device_packed(forest) -> tuple:
 
 def forest_predict(forest, X: np.ndarray, impl: str | None = None):
     """forest: repro.core.tree.Forest; X: (N, F) raw-value matrix.
-    -> (N, T, out_dim) per-tree outputs (original tree order)."""
+    -> (N, T, out_dim) per-tree outputs (original tree order).
+
+    Kernel/dispatch errors surface as a typed ``EngineFailure`` naming the
+    impl (DESIGN.md §9.1): a serving front-end must be able to tell "the
+    pallas engine died on this batch" apart from a schema or caller error
+    without parsing XLA tracebacks. Caller errors (unknown impl) stay
+    ``ValueError``.
+    """
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
-    Xd = jnp.asarray(X, jnp.float32)
-    depth = int(max(1, forest.depth))
-    if impl == "ref":
-        return forest_predict_ref(Xd, *device_soa(forest), depth=depth)
-    if impl == "pallas_single":
-        return forest_predict_pallas(Xd, *device_soa(forest), depth=depth)
-    if impl in ("pallas", "interpret"):
+    if impl not in ("ref", "pallas_single", "pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
+    from repro.core.api import EngineFailure
+    try:
+        Xd = jnp.asarray(X, jnp.float32)
+        depth = int(max(1, forest.depth))
+        if impl == "ref":
+            return forest_predict_ref(Xd, *device_soa(forest), depth=depth)
+        if impl == "pallas_single":
+            return forest_predict_pallas(Xd, *device_soa(forest), depth=depth)
         feat, thr, cat, lc, leaf, bd, inv = device_packed(forest)
         out = forest_predict_pallas_tiled(
             Xd, feat, thr, cat, lc, leaf, bd,
             interpret=(impl == "interpret"))
         return jnp.take(out, inv, axis=1)
-    raise ValueError(f"unknown impl {impl!r}")
+    except (EngineFailure, KeyboardInterrupt):
+        raise
+    except Exception as e:
+        raise EngineFailure(
+            f"forest_infer impl {impl!r} failed on a "
+            f"({np.shape(X)[0] if np.ndim(X) else '?'}, ...) batch: "
+            f"{type(e).__name__}: {e}", engine=impl) from e

@@ -44,11 +44,17 @@ class ForestServeBundle:
         return -(-n // top) * top
 
     def padded_size(self, n: int) -> int:
-        """The batch size a dispatch of ``n`` rows actually runs at."""
-        return self.bucket_for(max(1, n))
+        """The batch size a dispatch of ``n`` rows actually runs at.
+        Zero rows dispatch nothing — no phantom-row padding."""
+        return self.bucket_for(n) if n else 0
 
     def predict_encoded(self, X: np.ndarray) -> np.ndarray:
         n = X.shape[0]
+        if n == 0:
+            # correctly-shaped empty output, no engine dispatch: the
+            # predictor knows its trailing prediction shape (§5.1)
+            return np.zeros((0,) + tuple(self.predictor.out_shape),
+                            np.float32)
         b = self.padded_size(n)
         if b > n:
             X = np.concatenate(
@@ -151,8 +157,14 @@ class MicroBatcher:
         self._pending = []
 
     def result(self, ticket: int) -> np.ndarray:
-        if ticket not in self._results:
-            self.flush()
-        if ticket not in self._results:
-            raise KeyError(f"unknown or already-consumed ticket {ticket}")
+        if ticket in self._results:
+            return self._results.pop(ticket)
+        # validate BEFORE the side-effecting flush: a never-issued or
+        # already-consumed ticket must raise immediately without dispatching
+        # other callers' pending work
+        if not (isinstance(ticket, int) and 0 <= ticket < self._next_ticket):
+            raise KeyError(f"ticket {ticket!r} was never issued")
+        if not any(t == ticket for t, _ in self._pending):
+            raise KeyError(f"ticket {ticket} already consumed or evicted")
+        self.flush()
         return self._results.pop(ticket)

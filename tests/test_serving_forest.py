@@ -143,6 +143,49 @@ def test_micro_batcher_evicts_abandoned_results(trained):
     np.testing.assert_allclose(mb.result(tickets[-1]), gbt.predict(req), atol=0)
 
 
+def test_micro_batcher_bad_ticket_never_flushes(trained):
+    """A never-issued or already-claimed ticket is the CALLER's bug: it must
+    raise KeyError immediately, not force everyone else's pending work
+    through a premature padded dispatch."""
+    gbt, _, test = trained
+    bundle = make_forest_server(gbt, buckets=(16,), warmup=False)
+    mb = MicroBatcher(bundle, max_batch=64)
+    req = {k: v[:3] for k, v in test.items() if k != "income"}
+    t = mb.submit(req)
+    for bad in (999, -1, "nope"):
+        with pytest.raises(KeyError):
+            mb.result(bad)
+    assert mb.dispatches == 0 and mb.pending_rows() == 3   # queue untouched
+    np.testing.assert_allclose(mb.result(t), gbt.predict(req), atol=0)
+    assert mb.dispatches == 1
+    with pytest.raises(KeyError):
+        mb.result(t)                                       # already consumed
+    assert mb.dispatches == 1                              # ...and no reflush
+
+
+def test_zero_row_dispatch_returns_empty_shapes(trained):
+    """An empty batch is a legal request: no phantom padding row, just a
+    correctly-shaped (0, out_dim) — or (0,) for regression — result."""
+    from repro.core import Task
+    gbt, _, test = trained
+    bundle = make_forest_server(gbt, buckets=(16,), warmup=False)
+    assert bundle.padded_size(0) == 0
+    empty = {k: v[:0] for k, v in test.items() if k != "income"}
+    out = bundle.predict(empty)
+    assert out.shape == (0, 2) and out.dtype == np.float32
+    # regression head: trailing shape is scalar
+    train, _ = train_test_split(adult_like(300), 0.3, 1)
+    reg = RandomForestLearner(label="age", task=Task.REGRESSION, num_trees=3,
+                              max_depth=5).train(train)
+    reg_bundle = make_forest_server(reg, buckets=(16,), warmup=False)
+    empty_reg = {k: v[:0] for k, v in train.items() if k != "age"}
+    assert reg_bundle.predict(empty_reg).shape == (0,)
+    # and a MicroBatcher ticket for an empty request resolves, shape intact
+    mb = MicroBatcher(bundle, max_batch=64)
+    t = mb.submit(empty)
+    assert mb.result(t).shape == (0, 2)
+
+
 # -------------------------------------------------------------- bench smoke
 
 def test_infer_bench_smoke():
