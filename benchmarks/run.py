@@ -48,11 +48,15 @@ def main() -> None:
         print("== engines (paper App. B.4) ==", flush=True)
         engines_bench.run()
     if "infer" not in args.skip:
-        print("== inference serving stack (DESIGN.md §5) ==", flush=True)
+        print("== inference serving stack (DESIGN.md §5/§10) ==", flush=True)
         res = infer_bench.run(rows=20_000, reps=2)
-        print(f"  headline: {res['headline_speedup']:.2f}x compiled "
-              "vectorized vs seed per-call path "
-              "(full 100k-row run: python -m benchmarks.infer_bench)")
+        line = (f"  headline: {res['headline_speedup']:.2f}x best compiled "
+                "engine vs seed per-call path")
+        sk = res["configs"].get("sklearn_import")
+        if sk:
+            line += (f"; {sk['speedup_vs_sklearn']:.2f}x vs sklearn "
+                     f"({sk['best_strategy']})")
+        print(line + " (full 100k-row run: python -m benchmarks.infer_bench)")
     if "serve" not in args.skip:
         print("== fault-tolerant serving front-end (DESIGN.md §9) ==",
               flush=True)

@@ -246,8 +246,7 @@ class GradientBoostedTreesModel(DecisionForestModel):
         self.loss = loss
 
     def _compile_finalize(self):
-        loss, forest = self.loss, self.forest
-        return lambda per_tree: loss.activation(aggregate_gbt(per_tree, forest))
+        return _GbtFinalize(self.loss, self.forest)
 
     def predict_scores(self, dataset) -> np.ndarray:
         return aggregate_gbt(self._scores(dataset), self.forest)
@@ -259,15 +258,33 @@ class RandomForestModel(DecisionForestModel):
         self.winner_take_all = winner_take_all
 
     def _compile_finalize(self):
-        wta = self.winner_take_all and self.task == Task.CLASSIFICATION
-        regression = self.task == Task.REGRESSION
-
-        def finalize(per_tree: np.ndarray) -> np.ndarray:
-            out = aggregate_rf(per_tree, wta)
-            return out[:, 0] if regression else out
-
-        return finalize
+        return _RfFinalize(self.winner_take_all and
+                           self.task == Task.CLASSIFICATION,
+                           self.task == Task.REGRESSION)
 
 
 class CartModel(RandomForestModel):
     pass
+
+
+# finalize heads are module-level callable classes, not lambdas, so a
+# CompiledPredictor pickles whole (engines.py §10.4); they capture the
+# fields they need, NOT the model — see _compile_finalize's cycle note
+
+@dataclass
+class _GbtFinalize:
+    loss: object
+    forest: Forest
+
+    def __call__(self, per_tree: np.ndarray) -> np.ndarray:
+        return self.loss.activation(aggregate_gbt(per_tree, self.forest))
+
+
+@dataclass
+class _RfFinalize:
+    wta: bool
+    regression: bool
+
+    def __call__(self, per_tree: np.ndarray) -> np.ndarray:
+        out = aggregate_rf(per_tree, self.wta)
+        return out[:, 0] if self.regression else out

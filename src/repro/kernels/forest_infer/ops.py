@@ -78,6 +78,41 @@ def device_packed(forest) -> tuple:
     return c["packed"]
 
 
+def bucketed_runner(forest, strategy: str | None = None):
+    """Compiled depth-bucketed runner (DESIGN.md §10), built/uploaded once
+    per (forest, strategy). ``strategy`` None lets the per-bucket cost model
+    choose ("leaf_path" only where the matmul is ~free — an MXU backend);
+    "scan"/"leaf_path" force one strategy for every bucket (benchmarks,
+    differential tests)."""
+    c = _forest_cache(forest)
+    key = f"bucketed:{strategy or 'auto'}"
+    if key not in c:
+        from repro.core.tree import pack_depth_buckets
+        from repro.kernels.forest_infer.bucketed import build_bucketed_runner
+        bf = pack_depth_buckets(forest, strategy=strategy,
+                                matmul_cheap=(jax.default_backend() == "tpu"))
+        c[key] = build_bucketed_runner(bf)
+    return c[key]
+
+
+def forest_predict_bucketed(forest, X: np.ndarray,
+                            strategy: str | None = None) -> np.ndarray:
+    """Depth-bucketed prediction: (N, F) raw-value matrix ->
+    (N, T, out_dim) numpy, original tree order. Same EngineFailure contract
+    as ``forest_predict``."""
+    from repro.core.api import EngineFailure
+    try:
+        return bucketed_runner(forest, strategy)(X)
+    except (EngineFailure, KeyboardInterrupt):
+        raise
+    except Exception as e:
+        name = "leaf_path" if strategy == "leaf_path" else "bucketed"
+        raise EngineFailure(
+            f"forest_infer impl {name!r} failed on a "
+            f"({np.shape(X)[0] if np.ndim(X) else '?'}, ...) batch: "
+            f"{type(e).__name__}: {e}", engine=name) from e
+
+
 def forest_predict(forest, X: np.ndarray, impl: str | None = None):
     """forest: repro.core.tree.Forest; X: (N, F) raw-value matrix.
     -> (N, T, out_dim) per-tree outputs (original tree order).

@@ -64,6 +64,20 @@ class ForestServeBundle:
     def predict(self, batch) -> np.ndarray:
         return self.predict_encoded(self.predictor.encode(batch))
 
+    def warm_ladder(self, n_features: int,
+                    up_to: int | None = None) -> list[int]:
+        """Eagerly trace a jit'd engine (bucketed/leaf_path/pallas) at every
+        ladder bucket up to ``up_to`` rows, so no production dispatch ever
+        pays a trace. Returns the bucket sizes touched. For trace-free
+        engines (vectorized/naive) this is a cheap no-op pass."""
+        touched = []
+        for b in self.buckets:
+            if up_to is not None and b > self.bucket_for(up_to):
+                break
+            self.predict_encoded(np.zeros((b, n_features), np.float32))
+            touched.append(b)
+        return touched
+
     def predict_encoded_bulk(self, X: np.ndarray,
                              chunk_rows: int | None = None) -> np.ndarray:
         """Dispatch one LARGE encoded batch — an analysis replica sweep
@@ -90,8 +104,8 @@ def make_forest_server(model, engine: str | None = None,
     traces jit'd engines at the SMALLEST bucket only — the first dispatch
     that pads to a larger bucket still traces once at that size (warming
     the whole ladder eagerly would pay one compile per bucket up front;
-    call ``bundle.predict_encoded(np.zeros((b, F), np.float32))`` per
-    bucket ``b`` if that trade is wanted)."""
+    call ``bundle.warm_ladder(len(model.features))`` if that trade is
+    wanted — e.g. a CPU host serving the bucketed engine, §10)."""
     predictor = model.predictor(engine)
     bundle = ForestServeBundle(predictor, tuple(buckets))
     if warmup and len(model.features):

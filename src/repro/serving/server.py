@@ -271,15 +271,22 @@ class _ModelState:
 
 def _default_chain(model) -> list[str]:
     """The degradation chain, hardware-aware like ``compile_model``: start
-    at the engine a default compile would pick (pallas on TPU, vectorized
-    on CPU — interpret-mode pallas is a correctness path, not a serving
-    fallback) and continue down the preference order."""
+    at the engine a default compile would pick (pallas on TPU; on CPU the
+    size-aware bucketed/vectorized choice — interpret-mode pallas is a
+    correctness path, not a serving fallback) and continue down the
+    preference order. "leaf_path" never appears: it is an explicit-request
+    strategy, not a degradation level (on CPU it is strictly slower than
+    the bucketed scan it would 'degrade' to, §10.3)."""
     import jax
 
-    from repro.core.engines import available_engines
-    chain = available_engines(model.forest)
-    if chain[0] == "pallas" and jax.default_backend() == "cpu":
-        chain = chain[1:]
+    from repro.core.engines import available_engines, select_cpu_engine
+    chain = [e for e in available_engines(model.forest) if e != "leaf_path"]
+    if jax.default_backend() == "cpu":
+        head = select_cpu_engine(model.forest)
+        chain = [e for e in chain if e != "pallas"]
+        if head in chain and chain[0] != head:
+            # small forests: skip the bucketed trace, start at vectorized
+            chain = [head] + [e for e in chain if e != head]
     return chain
 
 

@@ -14,10 +14,14 @@ def rng():
 
 
 def _make_random_forest(n_trees, n_splits_list, n_features, out_dim=1,
-                        seed=0, cat_feats=()):
+                        seed=0, cat_feats=(), chain=False):
     """Synthetic valid Forest (random leaf-splitting order): n_splits_list
     cycles per tree, so mixed entries build ragged-depth forests; entries
-    over 2048 build >4096-node trees. cat_feats get random category masks."""
+    over 2048 build >4096-node trees. cat_feats get random category masks.
+    A 0-splits entry yields a single-leaf stump (random root leaf value).
+    ``chain=True`` always splits the DEEPEST open leaf, so a tree with k
+    splits has depth exactly k — deterministic-depth forests for the
+    depth-bucketing tests (tree.plan_depth_buckets)."""
     from repro.core.tree import empty_forest
 
     M = 2 * max(n_splits_list) + 1
@@ -25,10 +29,13 @@ def _make_random_forest(n_trees, n_splits_list, n_features, out_dim=1,
     rng = np.random.default_rng(seed)
     maxd = 0
     for t in range(n_trees):
+        f.leaf_value[t, 0] = rng.normal(size=out_dim)  # stump fallback
         leaves = [(0, 0)]
         n_nodes = 1
         for _ in range(n_splits_list[t % len(n_splits_list)]):
-            node, d = leaves.pop(int(rng.integers(len(leaves))))
+            pick = (max(range(len(leaves)), key=lambda i: leaves[i][1])
+                    if chain else int(rng.integers(len(leaves))))
+            node, d = leaves.pop(pick)
             j = int(rng.integers(n_features))
             f.feature[t, node] = j
             if j in cat_feats:
@@ -53,6 +60,31 @@ def _make_random_forest(n_trees, n_splits_list, n_features, out_dim=1,
 @pytest.fixture(scope="session")
 def random_forest_factory():
     return _make_random_forest
+
+
+# ----------------------------- forest zoo (traversal-strategy differentials)
+
+@pytest.fixture(scope="session")
+def depth_skewed_forest():
+    """Mixed depth-2 / depth-12 chains: the shape the depth-bucketed engine
+    exists for — shallow trees must stop early, deep trees must not."""
+    return _make_random_forest(24, [2, 12], 6, seed=21, chain=True)
+
+
+@pytest.fixture(scope="session")
+def stump_forest():
+    """Single-node trees only (boosted-stump shape): depth 0, the root IS
+    the leaf. Exercises the scan's sentinel self-loop and leaf_path's
+    empty-path scoring."""
+    return _make_random_forest(17, [0], 4, seed=22)
+
+
+@pytest.fixture(scope="session")
+def all_categorical_forest():
+    """Every split is a category-mask bit test (no numerical thresholds):
+    the cat-code cast path with nothing to hide behind."""
+    return _make_random_forest(12, [1, 3, 5], 4, seed=23,
+                               cat_feats=(0, 1, 2, 3))
 
 
 @pytest.fixture(scope="session")

@@ -68,9 +68,21 @@ class _Holder:
 def _assert_engines_agree(forest, X, atol=1e-5, naive_rows=None):
     from repro.core.tree import predict_naive
     model = _Holder(forest)
-    assert available_engines(forest) == ["pallas", "vectorized", "naive"]
+    engines = available_engines(forest)
+    # registry order: pallas, then the §10 CPU strategies (leaf_path only
+    # within its table budget), then the host engines
+    assert engines[0] == "pallas" and engines[1] == "bucketed"
+    assert engines[-2:] == ["vectorized", "naive"]
+    assert set(engines) - {"leaf_path"} == {"pallas", "bucketed",
+                                            "vectorized", "naive"}
     outs = {name: np.asarray(compile_model(model, name).per_tree(X))
             for name in ("vectorized", "pallas")}
+    for name in engines:
+        if name in ("bucketed", "leaf_path"):
+            got = np.asarray(compile_model(model, name).per_tree(X))
+            # the bucketed strategies are BIT-identical to the numpy
+            # engine, not merely allclose (DESIGN.md §10.5)
+            assert np.array_equal(got, outs["vectorized"]), name
     for name, o in outs.items():
         assert o.shape == (len(X), forest.n_trees, forest.leaf_value.shape[-1])
     np.testing.assert_allclose(outs["pallas"], outs["vectorized"], atol=atol,

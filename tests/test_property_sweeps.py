@@ -62,6 +62,49 @@ def test_histogram_kernel_sweep(n, f, s, nodes, bins, dt, seed):
     np.testing.assert_allclose(pal, ref, atol=1e-4, rtol=1e-4)
 
 
+@pytest.mark.slow
+@pytest.mark.traversal
+@settings(max_examples=30, deadline=None)
+@given(n=st.sampled_from([0, 1, 2, 7, 33]), trees=st.integers(1, 10),
+       n_feats=st.integers(2, 6), out_dim=st.sampled_from([1, 3]),
+       n_cat=st.integers(0, 2), hostile=st.booleans(),
+       seed=st.integers(0, 10_000))
+def test_traversal_strategy_equivalence_sweep(n, trees, n_feats, out_dim,
+                                              n_cat, hostile, seed):
+    """Property: the four CPU traversal strategies are ONE function — on
+    random ragged forests (stumps through depth ~10, categorical splits,
+    multi-output leaves) and hostile batches (0 rows, 1 row, NaN/±inf on
+    numerical columns, unseen/negative category codes), every strategy's
+    per-tree output is bit-identical to the vectorized engine."""
+    from conftest import _make_random_forest
+    from repro.core.tree import (LEAF_PATH_BUDGET, compile_predict_raw,
+                                 leaf_path_sizes, predict_naive)
+    from repro.kernels.forest_infer.ops import forest_predict_bucketed
+    rng = np.random.default_rng(seed)
+    cat_feats = tuple(range(n_cat))
+    splits = [int(s) for s in rng.integers(0, 11, size=min(trees, 4))]
+    forest = _make_random_forest(trees, splits, n_feats, out_dim=out_dim,
+                                 seed=seed, cat_feats=cat_feats)
+    X = (rng.normal(size=(n, n_feats)) * 2).astype(np.float32)
+    for j in cat_feats:
+        # unseen (>=256) and negative codes clamp, matching the oracle
+        X[:, j] = rng.integers(-5, 400, size=n)
+    if hostile and n >= 4 and n_cat < n_feats:
+        X[0, n_cat] = np.nan
+        X[1, n_cat] = np.inf
+        X[2, n_cat] = -np.inf
+        X[3, n_cat] = 3e38
+    want = compile_predict_raw(forest)(X)
+    assert want.shape == (n, trees, out_dim)
+    assert np.array_equal(predict_naive(forest, X), want)
+    assert np.array_equal(
+        np.asarray(forest_predict_bucketed(forest, X)), want)
+    i, l = leaf_path_sizes(forest)
+    if i * l <= LEAF_PATH_BUDGET:
+        assert np.array_equal(np.asarray(
+            forest_predict_bucketed(forest, X, strategy="leaf_path")), want)
+
+
 @settings(max_examples=10, deadline=None)
 @given(n=st.integers(1, 100), trees=st.integers(1, 5), seed=st.integers(0, 99))
 def test_forest_infer_kernel_sweep(n, trees, seed):
