@@ -177,11 +177,57 @@ def run(num_trees: int = 30, scaled_rows: int = 100_000, reps_cap: int = 99,
                       f"numpy={host:6.2f}s struct_identical="
                       f"{r['struct_identical']}", flush=True)
 
+    out["checkpoint_overhead"] = _checkpoint_overhead(
+        num_trees, reps_cap, verbose)
+
     out["headline_speedup"] = out["configs"]["gbt_default_scaled"][
         "after"]["numpy"]["speedup"]
     out["rf_headline_speedup"] = out["configs"]["rf_parallel_scaled"][
         "after"]["numpy"]["speedup"]
     return out
+
+
+def _checkpoint_overhead(num_trees: int, reps_cap: int, verbose: bool) -> dict:
+    """Wall-clock cost of DESIGN.md §11 checkpointing at the default cadence
+    (every 10 trees): interleaved best-of timing of train-without vs
+    train-with-checkpoints. Acceptance: <= 5% overhead."""
+    import shutil
+    import tempfile
+
+    from repro.train.checkpoint import CheckpointPolicy
+
+    small = SUITE[2]
+    train, _ = train_test_split(make_dataset(small), 0.3, small.seed)
+    ckdir = tempfile.mkdtemp(prefix="bench-ck-")
+    make = lambda: GradientBoostedTreesLearner(label="label",
+                                               num_trees=num_trees)
+
+    def with_ck():
+        shutil.rmtree(ckdir, ignore_errors=True)
+        return make().train(train, checkpoint=CheckpointPolicy(ckdir))
+
+    try:
+        (t_plain, t_ck), (m_plain, m_ck) = _time_pair(
+            [lambda: make().train(train), with_ck], min(4, max(2, reps_cap)))
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+    overhead = t_ck / t_plain - 1.0
+    row = {
+        "dataset": small.name, "num_trees": num_trees,
+        "every_n_trees": 10,
+        "train_s_plain": round(t_plain, 4),
+        "train_s_checkpointed": round(t_ck, 4),
+        "overhead_pct": round(100 * overhead, 2),
+        "acceptance_max_pct": 5.0,
+        "accepted": bool(overhead <= 0.05),
+        "bit_identical": _forests_identical(m_plain.forest, m_ck.forest),
+    }
+    if verbose:
+        print(f"  checkpoint_overhead      every=10 trees: "
+              f"plain={t_plain:6.2f}s ck={t_ck:6.2f}s "
+              f"overhead={row['overhead_pct']:+.2f}% "
+              f"accepted={row['accepted']}", flush=True)
+    return row
 
 
 def main():

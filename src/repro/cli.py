@@ -57,6 +57,19 @@ def cmd_show_dataspec(args):
 def cmd_train(args):
     from repro.core import Task, get_learner
     from repro.data.io import read_dataset
+    if args.resume:
+        # continue an interrupted run: the learner is rebuilt from the
+        # checkpoint manifest's train_config — only the dataset is re-read
+        from repro.train.checkpoint import resume_training
+        data = read_dataset(args.dataset)
+        valid = read_dataset(args.valid) if args.valid else None
+        model = resume_training(args.resume, data, valid)
+        model.save(args.output)
+        print(f"resumed from {args.resume}; model written to {args.output}")
+        logs = getattr(model, "training_logs", None)
+        for ev in (logs or {}).get("resilience", []):
+            print(f"  resilience: {ev}")
+        return
     hparams = {}
     for kv in args.hparam:
         k, v = kv.split("=", 1)
@@ -76,9 +89,18 @@ def cmd_train(args):
     learner = cls(**kw)
     data = read_dataset(args.dataset)
     valid = read_dataset(args.valid) if args.valid else None
-    model = learner.train(data, valid)
+    checkpoint = None
+    if args.checkpoint_dir:
+        from repro.train.checkpoint import CheckpointPolicy
+        checkpoint = CheckpointPolicy(args.checkpoint_dir,
+                                      every_n_trees=args.checkpoint_every)
+    model = learner.train(data, valid, checkpoint=checkpoint)
     model.save(args.output)
     se = getattr(model, "self_evaluation", None)
+    logs = getattr(model, "training_logs", None)
+    if isinstance(logs, dict) and logs.get("interrupted"):
+        print("training interrupted; truncated model saved "
+              f"(resume with: train --resume {args.checkpoint_dir} ...)")
     print(f"model written to {args.output}")
     if se is not None:
         print(se.report())
@@ -236,6 +258,15 @@ def main(argv=None):
     p.add_argument("--seed", type=int, default=1234)
     p.add_argument("--hparam", action="append", default=[])
     p.add_argument("--output", required=True)
+    p.add_argument("--checkpoint-dir", dest="checkpoint_dir",
+                   help="write atomic tree-boundary training checkpoints here "
+                        "(interruption-safe training, DESIGN.md §11)")
+    p.add_argument("--checkpoint-every", dest="checkpoint_every", type=int,
+                   default=10, help="checkpoint cadence in trees")
+    p.add_argument("--resume", metavar="CHECKPOINT_DIR",
+                   help="resume an interrupted run from its checkpoint "
+                        "directory (learner rebuilt from the manifest; "
+                        "bit-identical to an uninterrupted run)")
     p.set_defaults(fn=cmd_train)
 
     p = sub.add_parser("show_model")

@@ -117,8 +117,51 @@ class Model(abc.ABC):
         ``model.pkl`` (the model), plus human-readable artefacts —
         ``summary.txt`` and, when the model carries a dataspec,
         ``dataspec.json`` — so saved models are inspectable without
-        unpickling (paper §4.1 artefact style)."""
-        os.makedirs(path, exist_ok=True)
+        unpickling (paper §4.1 artefact style).
+
+        The write is ATOMIC (DESIGN.md §11.4): everything lands in a
+        temporary sibling directory, files are fsync'ed, and one rename
+        publishes the model. A crash mid-save can never leave the corrupt
+        half-written ``header.json``/``model.pkl`` states that Model.load
+        diagnoses — the target either keeps its previous contents or holds
+        the complete new model.
+        """
+        parent = os.path.dirname(os.path.abspath(path)) or "."
+        os.makedirs(parent, exist_ok=True)
+        if os.path.isdir(path) and os.listdir(path) and \
+                not os.path.exists(os.path.join(path, "header.json")):
+            raise YdfError(
+                f"Refusing to overwrite {path!r}: the directory exists, is "
+                "not empty, and does not look like a model directory (no "
+                "header.json). Solutions: (1) save to a fresh path, or (2) "
+                "remove the directory first.")
+        import shutil
+        import tempfile
+        tmp = tempfile.mkdtemp(
+            prefix=os.path.basename(path) + ".tmp-", dir=parent)
+        try:
+            self._write_model_dir(tmp)
+            for name in os.listdir(tmp):
+                fd = os.open(os.path.join(tmp, name), os.O_RDONLY)
+                try:
+                    os.fsync(fd)
+                finally:
+                    os.close(fd)
+            if os.path.isdir(path):
+                old = tempfile.mkdtemp(
+                    prefix=os.path.basename(path) + ".old-", dir=parent)
+                os.rename(path, os.path.join(old, "m"))
+                os.rename(tmp, path)
+                shutil.rmtree(old, ignore_errors=True)
+            else:
+                if os.path.exists(path):
+                    os.remove(path)
+                os.rename(tmp, path)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+
+    def _write_model_dir(self, path: str) -> None:
         meta = {"format_version": self.FORMAT_VERSION, "class": type(self).__name__}
         with open(os.path.join(path, "header.json"), "w") as f:
             json.dump(meta, f)
@@ -207,10 +250,13 @@ class Learner(abc.ABC):
         self.hparams = dataclasses.replace(hp, **hparams)
 
     @abc.abstractmethod
-    def train(self, dataset, valid=None) -> Model:
+    def train(self, dataset, valid=None, checkpoint=None) -> Model:
         """Train a Model. ``valid`` is optional (§3.3): when a learner needs
         validation (e.g. GBT early stopping) and none is given, it extracts one
-        from the training set itself."""
+        from the training set itself. ``checkpoint`` (a directory path or a
+        ``repro.train.checkpoint.CheckpointPolicy``) turns on interruption-
+        safe training with bit-identical resume (DESIGN.md §11); learners
+        without a checkpoint seam ignore it."""
 
     @abc.abstractmethod
     def default_hparams(self):

@@ -19,7 +19,7 @@ class CartLearner(Learner):
     def default_hparams(self) -> CartHparams:
         return CartHparams()
 
-    def train(self, dataset, valid=None) -> CartModel:
+    def train(self, dataset, valid=None, checkpoint=None) -> CartModel:
         hp: CartHparams = self.hparams
         rng = np.random.default_rng(self.seed)
         td = prepare_train_data(self, dataset, max_bins=hp.max_bins)
@@ -52,17 +52,52 @@ class CartLearner(Learner):
                               feature_names=td.features)
         forest.out_dim = out_dim
         forest.tree_class = None
-        w = np.zeros(N)
-        w[tr_idx] = 1.0
-        grow_tree(forest, 0, td.binned, td.X_raw, base * w[:, None], w > 0,
-                  leaf_fn, gp, rng)
 
-        if len(va_idx):
-            _prune(forest, td.X_raw[va_idx], td.y[va_idx], self.task)
+        # -- checkpoint seam (DESIGN.md §11). A single tree has one interior
+        # boundary: grown-but-unpruned. Pruning is deterministic given
+        # (forest, seed-derived validation split), so resuming from the
+        # "grown" stage and re-pruning is bit-identical to a clean run.
+        from repro.train.checkpoint import (
+            forest_payload, open_session, restore_forest)
+        from repro.core.rf import training_data_fingerprint
+        sess = open_session(checkpoint, self.train_config(),
+                            training_data_fingerprint(td.X_raw, td.y))
+        state = sess.resume() if sess is not None else None
+        grown = pruned = False
+        interrupted = False
+        if state is not None:
+            restore_forest(forest, state["forest"])
+            grown, pruned = True, bool(state["done"])
 
-        return CartModel(winner_take_all=False, forest=forest, spec=td.ds.spec,
-                         features=td.features, label=self.label, task=self.task,
-                         classes=td.classes)
+        def _payload(complete: bool) -> dict:
+            return {"kind": "cart", "trees_done": 1, "done": bool(complete),
+                    "forest": forest_payload(forest, 1)}
+
+        import contextlib
+        with (sess if sess is not None else contextlib.nullcontext()):
+            if not grown:
+                w = np.zeros(N)
+                w[tr_idx] = 1.0
+                grow_tree(forest, 0, td.binned, td.X_raw, base * w[:, None],
+                          w > 0, leaf_fn, gp, rng)
+                if sess is not None and sess.should_stop():
+                    # servable unpruned tree now; pruning happens on resume
+                    interrupted = True
+                    sess.save(1, _payload(False), done=False, force=True)
+            if not pruned and not interrupted:
+                if len(va_idx):
+                    _prune(forest, td.X_raw[va_idx], td.y[va_idx], self.task)
+                pruned = True
+                if sess is not None:
+                    sess.save(1, _payload(True), done=True, force=True)
+
+        model = CartModel(winner_take_all=False, forest=forest, spec=td.ds.spec,
+                          features=td.features, label=self.label, task=self.task,
+                          classes=td.classes)
+        if sess is not None:
+            model.training_logs = {"resilience": sess.events,
+                                   "interrupted": interrupted}
+        return model
 
 
 def _prune(forest: Forest, Xv: np.ndarray, yv: np.ndarray, task: Task) -> None:

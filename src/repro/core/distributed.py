@@ -43,9 +43,11 @@ def _gh_score(g, h, l2):
     return 0.5 * jnp.square(g) / (h + l2 + 1e-12)
 
 
-def best_split_gh(hist: jax.Array, min_examples: int, l2: float):
-    """hist: (nodes, F, B, 3) [g, h, n] -> (gain, feat, bin) per node (local
-    feature indices; bin = first right bin)."""
+def split_gain_tensor(hist: jax.Array, min_examples: int, l2: float):
+    """hist: (nodes, F, B, 3) [g, h, n] -> full gain tensor (nodes, F, B-1),
+    invalid splits = -inf. Per-feature columns are independent, so a
+    feature's gain values do not depend on which other features share the
+    histogram batch (the property the fault-recovery merge relies on)."""
     parent = hist.sum(2)                              # (nodes, F, 3)
     ps = _gh_score(parent[..., 0], parent[..., 1], l2)
     cum = jnp.cumsum(hist, axis=2)[:, :, :-1]         # (nodes, F, B-1, 3)
@@ -53,7 +55,13 @@ def best_split_gh(hist: jax.Array, min_examples: int, l2: float):
     gain = (_gh_score(cum[..., 0], cum[..., 1], l2)
             + _gh_score(right[..., 0], right[..., 1], l2) - ps[..., None])
     ok = (cum[..., 2] >= min_examples) & (right[..., 2] >= min_examples)
-    gain = jnp.where(ok, gain, -jnp.inf)
+    return jnp.where(ok, gain, -jnp.inf)
+
+
+def best_split_gh(hist: jax.Array, min_examples: int, l2: float):
+    """hist: (nodes, F, B, 3) [g, h, n] -> (gain, feat, bin) per node (local
+    feature indices; bin = first right bin)."""
+    gain = split_gain_tensor(hist, min_examples, l2)
     flat = gain.reshape(gain.shape[0], -1)            # (nodes, F*(B-1))
     idx = jnp.argmax(flat, axis=1)
     best = jnp.take_along_axis(flat, idx[:, None], 1)[:, 0]
@@ -167,18 +175,102 @@ def grow_tree_complete(level_fns, codes_sh, stats_sh, node_of0, cfg: DistGBTConf
             leaf_stats, node_of)
 
 
+# ---- shared boosting-state helpers (host side, backend-agnostic) ----
+
+def _init_pred(y: np.ndarray, task: str) -> float:
+    if task == "binary":
+        p0 = np.clip(y.mean(), 1e-6, 1 - 1e-6)
+        return float(np.log(p0 / (1 - p0)))
+    return float(y.mean())
+
+
+def _grad_hess(pred: np.ndarray, y: np.ndarray, task: str):
+    if task == "binary":
+        p = 1 / (1 + np.exp(-pred))
+        return p - y, np.maximum(p * (1 - p), 1e-12)
+    return pred - y, np.ones(len(y))
+
+
+def predict_scores_complete(trees: list[dict], init_pred: float, D: int,
+                            codes: np.ndarray) -> np.ndarray:
+    """Score complete-layout trees (shared by both distributed backends)."""
+    s = np.full(codes.shape[0], init_pred, np.float64)
+    for tree in trees:
+        node = np.zeros(codes.shape[0], np.int64)
+        off = 0
+        for d in range(D):
+            nid = off + node
+            f, b = tree["feat"][nid], tree["bin"][nid]
+            go = (codes[np.arange(len(codes)), f] >= b) \
+                & np.isfinite(tree["gain"][nid])
+            node = node * 2 + go
+            off += 2 ** d
+        s += tree["leaf"][node]
+    return s
+
+
+def complete_trees_to_forest(trees: list[dict], init_pred: float, D: int,
+                             feature_names: list[str] | None = None) -> Forest:
+    """Convert complete-layout trees to the pointer SoA for the engines."""
+    T = len(trees)
+    M = 2 ** (D + 1)
+    forest = empty_forest(T, M, 1, feature_names=feature_names)
+    forest.depth = D
+    forest.init_pred = np.array([init_pred], np.float32)
+    for t, tree in enumerate(trees):
+        # complete level order -> pointer layout (children in pairs).
+        # Invalid (degenerate) splits become always-false conditions so
+        # inference routes everything left, matching training.
+        nxt = 1
+        ptr = {0: 0}  # complete-id -> pointer-id
+        off = 0
+        for d in range(D):
+            for i in range(2 ** d):
+                cid = off + i
+                pid = ptr[cid]
+                valid = bool(np.isfinite(tree["gain"][cid]))
+                forest.feature[t, pid] = max(int(tree["feat"][cid]), 0)
+                if valid:
+                    forest.split_bin[t, pid] = tree["bin"][cid]
+                    forest.threshold[t, pid] = float(tree["bin"][cid]) - 0.5
+                    forest.split_gain[t, pid] = max(
+                        float(tree["gain"][cid]), 0.0)
+                else:
+                    forest.split_bin[t, pid] = 65535
+                    forest.threshold[t, pid] = np.float32(3e38)
+                forest.left_child[t, pid] = nxt
+                left_cid = off + 2 ** d + 2 * i  # = 2^(d+1)-1 + 2i
+                ptr[left_cid] = nxt
+                ptr[left_cid + 1] = nxt + 1
+                nxt += 2
+            off += 2 ** d
+        for i in range(2 ** D):  # off == 2^D - 1 here
+            pid = ptr[off + i]
+            forest.left_child[t, pid] = -1
+            forest.feature[t, pid] = -1
+            forest.leaf_value[t, pid, 0] = tree["leaf"][i]
+        forest.n_nodes[t] = nxt
+    return forest
+
+
 class DistributedGBT:
     """Boosted trees on the (data x model) mesh. Binary classification /
     regression on pre-binned numerical features (uint8 codes).
 
-    Fault tolerance: ``state_dict``/``load_state`` checkpoint the boosting
-    state (trees + predictions + RNG counter); training resumes mid-forest.
+    Fault tolerance rides the DESIGN.md §11 checkpoint layer:
+    ``fit(..., checkpoint=CheckpointPolicy(dir))`` writes atomic tree-boundary
+    checkpoints and resumes bit-identically — the same serialization path the
+    host learners use (the bespoke ``state_dict`` is gone). The stored config
+    excludes the mesh shape on purpose: trees are numerically equivalent
+    across mesh placements (tested at 1e-4), so a run checkpointed on one
+    grid may resume on another.
     """
 
     def __init__(self, cfg: DistGBTConfig, mesh: Mesh):
         self.cfg = cfg
         self.mesh = mesh
         self.trees: list[dict] = []
+        self.training_logs: dict = {}
         self._level_fns: dict[int, list] = {}
 
     def _fns(self, F_local: int):
@@ -188,8 +280,13 @@ class DistributedGBT:
                 for d in range(self.cfg.max_depth + 1)]
         return self._level_fns[F_local]
 
+    def _train_config(self, task: str) -> dict:
+        import dataclasses as dc
+        return {"trainer": "DistributedGBT", "task": task,
+                "cfg": dc.asdict(self.cfg)}
+
     def fit(self, codes: np.ndarray, y: np.ndarray, *, task: str = "binary",
-            resume_state: dict | None = None):
+            checkpoint=None):
         cfg = self.cfg
         N, F = codes.shape
         da = self.mesh.shape[cfg.data_axis]
@@ -202,110 +299,95 @@ class DistributedGBT:
         sh = NamedSharding(self.mesh, P(cfg.data_axis, cfg.model_axis))
         codes_d = jax.device_put(jnp.asarray(codes), sh)
         pred = np.zeros(N, np.float64)
-        start = 0
-        if resume_state is not None:
-            self.trees = list(resume_state["trees"])
-            pred = resume_state["pred"].copy()
-            start = len(self.trees)
-        if task == "binary":
-            p0 = np.clip(y.mean(), 1e-6, 1 - 1e-6)
-            self.init_pred = float(np.log(p0 / (1 - p0))) if start == 0 \
-                else resume_state["init_pred"]
-        else:
-            self.init_pred = float(y.mean()) if start == 0 \
-                else resume_state["init_pred"]
-        if start == 0:
-            pred[:] = self.init_pred
+        self.init_pred = _init_pred(y, task)
+        pred[:] = self.init_pred
+        self.trees = []
 
+        from repro.core.rf import training_data_fingerprint
+        from repro.train.checkpoint import open_session
+        sess = open_session(checkpoint, self._train_config(task),
+                            training_data_fingerprint(codes, y))
+        interrupted = False
+        if sess is not None:
+            state = sess.resume()
+            if state is not None:
+                self.trees = list(state["trees"])
+                pred = np.copy(state["pred"])
+                self.init_pred = float(state["init_pred"])
+
+        import contextlib
         rep = NamedSharding(self.mesh, P(cfg.data_axis))
-        for it in range(start, cfg.num_trees):
-            if task == "binary":
-                p = 1 / (1 + np.exp(-pred))
-                g, h = p - y, np.maximum(p * (1 - p), 1e-12)
-            else:
-                g, h = pred - y, np.ones(N)
-            stats = np.stack([g, h, np.ones(N)], 1).astype(np.float32)
-            stats_d = jax.device_put(jnp.asarray(stats),
-                                     NamedSharding(self.mesh, P(cfg.data_axis, None)))
-            node0 = jax.device_put(jnp.zeros(N, jnp.int32), rep)
-            feat, bin_, gain, leaf_stats, node_of = grow_tree_complete(
-                fns, codes_d, stats_d, node0, cfg)
-            leaf = -cfg.shrinkage * leaf_stats[:, 0] / (leaf_stats[:, 1]
-                                                        + cfg.l2 + 1e-12)
-            tree = {"feat": feat, "bin": bin_, "gain": gain,
-                    "leaf": leaf.astype(np.float32)}
-            self.trees.append(tree)
-            # node_of is in leaf-level space [0, 2^D) after D split rounds
-            pred += leaf[np.asarray(node_of)]
+        with (sess if sess is not None else contextlib.nullcontext()):
+            for it in range(len(self.trees), cfg.num_trees):
+                g, h = _grad_hess(pred, y, task)
+                stats = np.stack([g, h, np.ones(N)], 1).astype(np.float32)
+                stats_d = jax.device_put(jnp.asarray(stats),
+                                         NamedSharding(self.mesh, P(cfg.data_axis, None)))
+                node0 = jax.device_put(jnp.zeros(N, jnp.int32), rep)
+                feat, bin_, gain, leaf_stats, node_of = grow_tree_complete(
+                    fns, codes_d, stats_d, node0, cfg)
+                leaf = -cfg.shrinkage * leaf_stats[:, 0] / (leaf_stats[:, 1]
+                                                            + cfg.l2 + 1e-12)
+                tree = {"feat": feat, "bin": bin_, "gain": gain,
+                        "leaf": leaf.astype(np.float32)}
+                self.trees.append(tree)
+                # node_of is in leaf-level space [0, 2^D) after D split rounds
+                pred += leaf[np.asarray(node_of)]
+                if sess is not None:
+                    done = len(self.trees) == cfg.num_trees
+                    if not done and sess.should_stop():
+                        interrupted = True
+                    sess.save(len(self.trees),
+                              {"kind": "dist_gbt", "trees": list(self.trees),
+                               "pred": np.copy(pred),
+                               "init_pred": self.init_pred},
+                              done=done, force=done or interrupted)
+                    if interrupted:
+                        break
+        self.training_logs = {
+            "resilience": sess.events if sess is not None else [],
+            "interrupted": interrupted}
         return self
 
-    def state_dict(self) -> dict:
-        # predictions are recomputable; store for exact resume
-        return {"trees": list(self.trees), "init_pred": self.init_pred}
-
     def predict_scores(self, codes: np.ndarray) -> np.ndarray:
-        s = np.full(codes.shape[0], self.init_pred, np.float64)
-        D = self.cfg.max_depth
-        for tree in self.trees:
-            node = np.zeros(codes.shape[0], np.int64)
-            off = 0
-            for d in range(D):
-                nid = off + node
-                f, b = tree["feat"][nid], tree["bin"][nid]
-                go = (codes[np.arange(len(codes)), f] >= b) \
-                    & np.isfinite(tree["gain"][nid])
-                node = node * 2 + go
-                off += 2 ** d
-            s += tree["leaf"][node]
-        return s
+        return predict_scores_complete(self.trees, self.init_pred,
+                                       self.cfg.max_depth, codes)
 
     def to_forest(self, feature_names: list[str] | None = None) -> Forest:
-        """Convert complete-layout trees to the pointer SoA for the engines."""
-        D = self.cfg.max_depth
-        T = len(self.trees)
-        M = 2 ** (D + 1)
-        forest = empty_forest(T, M, 1, feature_names=feature_names)
-        forest.depth = D
-        forest.init_pred = np.array([self.init_pred], np.float32)
-        for t, tree in enumerate(self.trees):
-            # complete level order -> pointer layout (children in pairs).
-            # Invalid (degenerate) splits become always-false conditions so
-            # inference routes everything left, matching training.
-            nxt = 1
-            ptr = {0: 0}  # complete-id -> pointer-id
-            off = 0
-            for d in range(D):
-                for i in range(2 ** d):
-                    cid = off + i
-                    pid = ptr[cid]
-                    valid = bool(np.isfinite(tree["gain"][cid]))
-                    forest.feature[t, pid] = max(int(tree["feat"][cid]), 0)
-                    if valid:
-                        forest.split_bin[t, pid] = tree["bin"][cid]
-                        forest.threshold[t, pid] = float(tree["bin"][cid]) - 0.5
-                        forest.split_gain[t, pid] = max(
-                            float(tree["gain"][cid]), 0.0)
-                    else:
-                        forest.split_bin[t, pid] = 65535
-                        forest.threshold[t, pid] = np.float32(3e38)
-                    forest.left_child[t, pid] = nxt
-                    left_cid = off + 2 ** d + 2 * i  # = 2^(d+1)-1 + 2i
-                    ptr[left_cid] = nxt
-                    ptr[left_cid + 1] = nxt + 1
-                    nxt += 2
-                off += 2 ** d
-            for i in range(2 ** D):  # off == 2^D - 1 here
-                pid = ptr[off + i]
-                forest.left_child[t, pid] = -1
-                forest.feature[t, pid] = -1
-                forest.leaf_value[t, pid, 0] = tree["leaf"][i]
-            forest.n_nodes[t] = nxt
-        return forest
+        return complete_trees_to_forest(self.trees, self.init_pred,
+                                        self.cfg.max_depth, feature_names)
 
 
 # =====================================================================
 # Simulation backend (paper §3.9's third implementation) + fault tolerance
 # =====================================================================
+
+@dataclass(frozen=True)
+class WorkerFaultPlan:
+    """A deterministic worker-death schedule for the simulation backend,
+    mirroring ``serving/faults.py``: explicit ``(tree, level, worker)``
+    triples for targeted tier-1 scenarios plus a seeded per-(tree, level,
+    worker) Bernoulli ``death_rate`` for soak runs. Pure counter-hash — no
+    wall-clock — so every fault run is exactly reproducible.
+    """
+    seed: int = 0
+    deaths: tuple = ()           # ((tree, level, worker), ...)
+    death_rate: float = 0.0
+
+    def deaths_at(self, tree: int, level: int,
+                  worker_ids: list[int]) -> list[int]:
+        out = [w for (t, l, w) in self.deaths
+               if t == tree and l == level and w in worker_ids]
+        if self.death_rate > 0.0:
+            for w in worker_ids:
+                if w in out:
+                    continue
+                u = np.random.default_rng(
+                    (self.seed & 0xFFFFFFFF, 7919, tree, level, w)).random()
+                if u < self.death_rate:
+                    out.append(w)
+        return sorted(out)
+
 
 class SimulatedWorker:
     """A training worker owning a set of feature columns."""
@@ -320,12 +402,21 @@ class SimulatedWorker:
         from repro.core.splitters import build_histogram
         if not self.feature_ids:
             return [(-np.inf, -1, 0)] * n_nodes
-        sub = self.codes[:, self.feature_ids]
+        # scan features in GLOBAL-id order so the within-worker tie-break
+        # (first max = smallest feature id, then smallest bin) is a property
+        # of the features themselves, not of the assignment order — after a
+        # death reassigns features, the surviving workers still propose the
+        # exact same candidates (fault runs stay bit-identical to clean)
+        fids = sorted(self.feature_ids)
+        sub = self.codes[:, fids]
         hist = build_histogram(sub, stats, node_of, n_nodes, cfg.n_bins)
-        g, f, b = best_split_gh(jnp.asarray(hist), cfg.min_examples, cfg.l2)
-        g, f, b = np.asarray(g), np.asarray(f), np.asarray(b)
-        return [(float(g[i]), self.feature_ids[int(f[i])], int(b[i]))
-                for i in range(n_nodes)]
+        gain = np.asarray(split_gain_tensor(jnp.asarray(hist),
+                                            cfg.min_examples, cfg.l2))
+        B1 = gain.shape[2]
+        flat = gain.reshape(n_nodes, -1)
+        idx = flat.argmax(1)
+        return [(float(flat[i, idx[i]]), fids[int(idx[i]) // B1],
+                 int(idx[i]) % B1 + 1) for i in range(n_nodes)]
 
     def partition(self, feature: int, bin_: int) -> np.ndarray:
         return self.codes[:, feature] >= bin_
@@ -333,20 +424,46 @@ class SimulatedWorker:
 
 class SimulatedCluster:
     """Single-process multi-worker simulation: breakpoint-able, step-wise,
-    with worker-failure injection and dynamic feature reassignment (§3.9)."""
+    with worker-failure injection and dynamic feature reassignment (§3.9).
+
+    Fault-tolerant by construction (DESIGN.md §11.3):
+
+    * a ``WorkerFaultPlan`` kills workers at scheduled ``(tree, level)``
+      points — candidates computed in that level pass are treated as LOST
+      and the level RESTARTS against the surviving workers after dynamic
+      feature reassignment;
+    * candidate merge uses a total order — (highest gain, then smallest
+      feature id, then smallest bin) — so the chosen split is independent of
+      which worker proposed it. That makes a faulted run's forest
+      BIT-IDENTICAL to the clean run (the invariant the recovery tests pin);
+    * ``fit(..., checkpoint=CheckpointPolicy(dir))`` writes the same atomic
+      tree-boundary checkpoints as every other trainer, so a full cluster
+      crash resumes mid-forest.
+
+    Every death / reassignment / restart is recorded in
+    ``training_logs["resilience"]``.
+    """
 
     def __init__(self, codes: np.ndarray, n_workers: int, cfg: DistGBTConfig,
-                 seed: int = 0):
+                 seed: int = 0, fault_plan: WorkerFaultPlan | None = None):
         self.cfg = cfg
         self.codes = codes
+        self.seed = seed
         F = codes.shape[1]
         rng = np.random.default_rng(seed)
         assign = np.array_split(rng.permutation(F), n_workers)
         self.workers = [SimulatedWorker(w, codes, list(a))
                         for w, a in enumerate(assign)]
         self.traffic_bytes = 0
+        self.fault_plan = fault_plan if fault_plan is not None else WorkerFaultPlan()
+        self.trees: list[dict] = []
+        self.init_pred = 0.0
+        self.resilience: list[dict] = []
+        self.training_logs: dict = {"resilience": self.resilience}
+        self._tree_counter = 0
 
-    def kill_worker(self, wid: int) -> None:
+    def kill_worker(self, wid: int, *, tree: int | None = None,
+                    level: int | None = None) -> None:
         """Fault injection: reassign the dead worker's features round-robin
         (the paper's dynamic feature re-allocation)."""
         dead = self.workers[wid]
@@ -354,23 +471,52 @@ class SimulatedCluster:
         alive = [w for w in self.workers if w.alive]
         if not alive:
             raise RuntimeError("all workers failed")
+        n_feats = len(dead.feature_ids)
         for i, f in enumerate(dead.feature_ids):
             alive[i % len(alive)].feature_ids.append(f)
         dead.feature_ids = []
+        self.resilience.append(
+            {"event": "worker_death", "worker": wid, "tree": tree,
+             "level": level, "features_reassigned": n_feats,
+             "workers_alive": len(alive)})
 
-    def grow_tree(self, stats: np.ndarray) -> dict:
+    def _train_config(self, task: str) -> dict:
+        import dataclasses as dc
+        return {"trainer": "SimulatedCluster", "task": task,
+                "cfg": dc.asdict(self.cfg)}
+
+    def grow_tree(self, stats: np.ndarray, tree_index: int | None = None) -> dict:
+        t = self._tree_counter if tree_index is None else tree_index
+        self._tree_counter = t + 1
         cfg = self.cfg
         N = self.codes.shape[0]
         node_of = np.zeros(N, np.int32)
         feats, bins, gains = [], [], []
         for d in range(cfg.max_depth):
             n_nodes = 2 ** d
-            cands = [w.local_best(stats, node_of, n_nodes, cfg)
-                     for w in self.workers if w.alive]
-            self.traffic_bytes += sum(len(c) for c in cands) * 12  # 3 scalars
+            while True:
+                cands = [w.local_best(stats, node_of, n_nodes, cfg)
+                         for w in self.workers if w.alive]
+                self.traffic_bytes += sum(len(c) for c in cands) * 12  # 3 scalars
+                dead = self.fault_plan.deaths_at(
+                    t, d, [w.wid for w in self.workers if w.alive])
+                if not dead:
+                    break
+                # deaths mid-level: the level pass's candidates are lost.
+                # Reassign the dead workers' features, restart the level.
+                # Histograms are pure functions of (data, node_of), and the
+                # merge order is total, so the restarted level is
+                # bit-identical to a clean level over the same partition.
+                for wid in dead:
+                    self.kill_worker(wid, tree=t, level=d)
+                self.resilience.append(
+                    {"event": "level_restart", "tree": t, "level": d,
+                     "deaths": list(dead)})
             for i in range(n_nodes):
-                best = max((c[i] for c in cands), key=lambda x: x[0])
-                g, f, b = best
+                # assignment-independent merge: gain desc, feature id asc,
+                # bin asc — a worker death can never change the winner
+                g, f, b = max((c[i] for c in cands),
+                              key=lambda x: (x[0], -x[1], -x[2]))
                 feats.append(f if np.isfinite(g) else 0)
                 bins.append(b)
                 gains.append(g)
@@ -393,3 +539,57 @@ class SimulatedCluster:
             leaf[i] = -cfg.shrinkage * G / (H + cfg.l2 + 1e-12)
         return {"feat": np.array(feats), "bin": np.array(bins),
                 "gain": np.array(gains), "leaf": leaf, "node_of": node_of}
+
+    # ---- boosting driver (same loop shape as DistributedGBT.fit) ----
+    def fit(self, y: np.ndarray, *, task: str = "binary", checkpoint=None):
+        cfg = self.cfg
+        N = self.codes.shape[0]
+        pred = np.zeros(N, np.float64)
+        self.init_pred = _init_pred(y, task)
+        pred[:] = self.init_pred
+        self.trees = []
+
+        from repro.core.rf import training_data_fingerprint
+        from repro.train.checkpoint import open_session
+        sess = open_session(checkpoint, self._train_config(task),
+                            training_data_fingerprint(self.codes, y))
+        interrupted = False
+        if sess is not None:
+            state = sess.resume()
+            if state is not None:
+                self.trees = list(state["trees"])
+                pred = np.copy(state["pred"])
+                self.init_pred = float(state["init_pred"])
+
+        import contextlib
+        with (sess if sess is not None else contextlib.nullcontext()):
+            for it in range(len(self.trees), cfg.num_trees):
+                g, h = _grad_hess(pred, y, task)
+                stats = np.stack([g, h, np.ones(N)], 1)
+                tree = self.grow_tree(stats, tree_index=it)
+                self.trees.append(
+                    {k: tree[k] for k in ("feat", "bin", "gain", "leaf")})
+                pred += tree["leaf"][tree["node_of"]]
+                if sess is not None:
+                    done = len(self.trees) == cfg.num_trees
+                    if not done and sess.should_stop():
+                        interrupted = True
+                    sess.save(len(self.trees),
+                              {"kind": "sim_gbt", "trees": list(self.trees),
+                               "pred": np.copy(pred),
+                               "init_pred": self.init_pred},
+                              done=done, force=done or interrupted)
+                    if interrupted:
+                        break
+        self.training_logs = {"resilience": self.resilience,
+                              "checkpoint": sess.events if sess is not None else [],
+                              "interrupted": interrupted}
+        return self
+
+    def predict_scores(self, codes: np.ndarray) -> np.ndarray:
+        return predict_scores_complete(self.trees, self.init_pred,
+                                       self.cfg.max_depth, codes)
+
+    def to_forest(self, feature_names: list[str] | None = None) -> Forest:
+        return complete_trees_to_forest(self.trees, self.init_pred,
+                                        self.cfg.max_depth, feature_names)

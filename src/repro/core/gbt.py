@@ -33,7 +33,8 @@ class GradientBoostedTreesLearner(Learner):
         return GBTHparams()
 
     # ------------------------------------------------------------- train
-    def train(self, dataset, valid=None) -> GradientBoostedTreesModel:
+    def train(self, dataset, valid=None, checkpoint=None
+              ) -> GradientBoostedTreesModel:
         hp: GBTHparams = self.hparams
         rng = np.random.default_rng(self.seed)
         td = prepare_train_data(self, dataset, max_bins=hp.max_bins)
@@ -97,44 +98,95 @@ class GradientBoostedTreesLearner(Learner):
         best_loss, best_t, patience = np.inf, 0, hp.early_stopping_patience
         train_losses, valid_losses = [], []
 
-        for it in range(hp.num_trees):
-            g, h = loss.grad_hess(pred, y, w)
-            bag = w if hp.subsample >= 1.0 else w * (rng.random(N) < hp.subsample)
-            for k in range(K):
-                t = it * K + k
-                stats = np.stack([
-                    g[:, k] * bag,
-                    (h[:, k] if hp.use_hessian_gain else np.ones(N)) * bag,
-                    h[:, k] * bag,
-                    bag,
-                ], axis=1).astype(np.float64)
-                node_of = grow_tree(forest, t, sub_td.binned, sub_td.X_raw,
-                                    stats, bag > 0, leaf_fn, gp, rng,
-                                    sub_td.num_lo, sub_td.num_hi)
-                vals = forest.leaf_value[t, np.maximum(node_of, 0), 0]
-                upd = np.where(node_of >= 0, vals, 0.0)
-                if hp.subsample < 1.0:  # OOB examples still move (predict path)
-                    oob = (bag <= 0)
-                    if oob.any():
-                        tr = predict_raw(_one_tree(forest, t), sub_td.X_raw[oob])
-                        upd = upd.copy()
-                        upd[oob] = tr[:, 0, 0]
-                pred[:, k] += upd
-                if pred_v is not None:
-                    pv = predict_raw(_one_tree(forest, t), Xv)[:, 0, 0]
-                    pred_v[:, k] += pv
-            train_losses.append(loss.value(pred, y, w))
-            if pred_v is not None:
-                vl = loss.value(pred_v, yv, wv)
-                valid_losses.append(vl)
-                if vl < best_loss - 1e-9:
-                    best_loss, best_t = vl, it + 1
-                elif hp.early_stopping == "LOSS_INCREASE" and it + 1 - best_t >= patience:
+        # -- checkpoint seam (DESIGN.md §11): the bit-identical-resume
+        # closure is (forest slices, pred, pred_v, early-stop bookkeeping,
+        # rng.bit_generator.state) snapshotted at tree boundaries. The seam
+        # sits OUTSIDE grow_tree, so host-batched and device engines
+        # checkpoint identically.
+        from repro.train.checkpoint import (
+            forest_payload, open_session, restore_forest)
+        from repro.core.rf import training_data_fingerprint
+        sess = open_session(checkpoint, self.train_config(),
+                            training_data_fingerprint(td.X_raw, td.y))
+        trees_done, stopped, interrupted = 0, False, False
+
+        def _payload(complete: bool) -> dict:
+            return {"kind": "gbt", "trees_done": trees_done,
+                    "done": bool(complete),
+                    "forest": forest_payload(forest, trees_done * K),
+                    "pred": np.copy(pred),
+                    "pred_v": None if pred_v is None else np.copy(pred_v),
+                    "rng_state": rng.bit_generator.state,
+                    "best_loss": float(best_loss), "best_t": int(best_t),
+                    "train_losses": list(train_losses),
+                    "valid_losses": list(valid_losses)}
+
+        if sess is not None:
+            state = sess.resume()
+            if state is not None:
+                trees_done = int(state["trees_done"])
+                stopped = bool(state["done"])
+                restore_forest(forest, state["forest"])
+                pred[:] = state["pred"]
+                if pred_v is not None and state["pred_v"] is not None:
+                    pred_v[:] = state["pred_v"]
+                rng.bit_generator.state = state["rng_state"]
+                best_loss = state["best_loss"]
+                best_t = state["best_t"]
+                train_losses = list(state["train_losses"])
+                valid_losses = list(state["valid_losses"])
+
+        import contextlib
+        with (sess if sess is not None else contextlib.nullcontext()):
+            for it in range(trees_done, hp.num_trees):
+                if stopped:
                     break
+                g, h = loss.grad_hess(pred, y, w)
+                bag = w if hp.subsample >= 1.0 else w * (rng.random(N) < hp.subsample)
+                for k in range(K):
+                    t = it * K + k
+                    stats = np.stack([
+                        g[:, k] * bag,
+                        (h[:, k] if hp.use_hessian_gain else np.ones(N)) * bag,
+                        h[:, k] * bag,
+                        bag,
+                    ], axis=1).astype(np.float64)
+                    node_of = grow_tree(forest, t, sub_td.binned, sub_td.X_raw,
+                                        stats, bag > 0, leaf_fn, gp, rng,
+                                        sub_td.num_lo, sub_td.num_hi)
+                    vals = forest.leaf_value[t, np.maximum(node_of, 0), 0]
+                    upd = np.where(node_of >= 0, vals, 0.0)
+                    if hp.subsample < 1.0:  # OOB examples still move (predict path)
+                        oob = (bag <= 0)
+                        if oob.any():
+                            tr = predict_raw(_one_tree(forest, t), sub_td.X_raw[oob])
+                            upd = upd.copy()
+                            upd[oob] = tr[:, 0, 0]
+                    pred[:, k] += upd
+                    if pred_v is not None:
+                        pv = predict_raw(_one_tree(forest, t), Xv)[:, 0, 0]
+                        pred_v[:, k] += pv
+                trees_done = it + 1
+                train_losses.append(loss.value(pred, y, w))
+                if pred_v is not None:
+                    vl = loss.value(pred_v, yv, wv)
+                    valid_losses.append(vl)
+                    if vl < best_loss - 1e-9:
+                        best_loss, best_t = vl, it + 1
+                    elif hp.early_stopping == "LOSS_INCREASE" and it + 1 - best_t >= patience:
+                        stopped = True
+                if sess is not None:
+                    complete = stopped or trees_done == hp.num_trees
+                    if not complete and sess.should_stop():
+                        interrupted = True
+                    sess.save(trees_done, _payload(complete), done=complete,
+                              force=complete or interrupted)
+                    if interrupted:
+                        break
 
         n_keep = (best_t if pred_v is not None and hp.early_stopping != "NONE"
-                  else it + 1) * K
-        forest = forest.truncated(max(n_keep, K))
+                  and not interrupted else trees_done) * K
+        forest = forest.truncated(max(min(n_keep, trees_done * K), K))
         self_eval = None
         if pred_v is not None and len(yv):
             act = loss.activation(pred_v)
@@ -154,6 +206,9 @@ class GradientBoostedTreesLearner(Learner):
                                "num_trees": forest.n_trees // K,
                                "growth_engine": engine_used,
                                "engine_fallback": engine_fallback}
+        if sess is not None:
+            model.training_logs["resilience"] = sess.events
+            model.training_logs["interrupted"] = interrupted
         return model
 
 

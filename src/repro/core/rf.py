@@ -36,7 +36,7 @@ class RandomForestLearner(Learner):
     def default_hparams(self) -> RFHparams:
         return RFHparams()
 
-    def train(self, dataset, valid=None) -> RandomForestModel:
+    def train(self, dataset, valid=None, checkpoint=None) -> RandomForestModel:
         hp: RFHparams = self.hparams
         td = prepare_train_data(self, dataset, max_bins=hp.max_bins)
         N, F = td.binned.codes.shape
@@ -95,34 +95,73 @@ class RandomForestLearner(Learner):
         oob_cnt = np.zeros(N, np.int64)
         tree_rng = [np.random.default_rng((self.seed & 0xFFFFFFFF, 104729, t))
                     for t in range(hp.num_trees)]
-        for b0 in range(0, hp.num_trees, block):
-            ts = list(range(b0, min(b0 + block, hp.num_trees)))
-            counts_b, stats_b = [], []
-            for t in ts:
-                if hp.bootstrap:
-                    counts = tree_rng[t].multinomial(
-                        N, np.full(N, 1.0 / N)).astype(np.float64)
-                else:
-                    counts = np.ones(N)
-                counts_b.append(counts)
-                stats_b.append(base_stats * counts[:, None])
-            grow_trees(forest, ts, td.binned, td.X_raw, stats_b,
-                       [c > 0 for c in counts_b], leaf_fn, gp,
-                       [tree_rng[t] for t in ts], td.num_lo, td.num_hi,
-                       block=block)
-            if hp.compute_oob and hp.bootstrap:
-                from repro.core.gbt import _one_tree
-                for bi, t in enumerate(ts):
-                    oob = counts_b[bi] == 0
-                    if not oob.any():
-                        continue
-                    pr = predict_raw(_one_tree(forest, t), td.X_raw[oob])[:, 0]
-                    if hp.winner_take_all and out_dim > 1:
-                        vote = np.zeros_like(pr)
-                        vote[np.arange(len(pr)), pr.argmax(1)] = 1.0
-                        pr = vote
-                    oob_sum[oob] += pr
-                    oob_cnt[oob] += 1
+
+        # -- checkpoint seam (DESIGN.md §11). RF checkpoints only at
+        # LOCKSTEP BLOCK boundaries so the resumed `range(trees_done, ...)`
+        # realigns with the tree-parallel blocks; per-tree keyed rng streams
+        # are re-derived from (seed, tree), so no generator state is stored.
+        from repro.train.checkpoint import (
+            forest_payload, open_session, restore_forest)
+        sess = open_session(checkpoint, self.train_config(),
+                            training_data_fingerprint(td.X_raw, td.y))
+        trees_done, interrupted = 0, False
+
+        def _payload(complete: bool) -> dict:
+            return {"kind": "rf", "trees_done": trees_done,
+                    "done": bool(complete),
+                    "forest": forest_payload(forest, trees_done),
+                    "oob_sum": np.copy(oob_sum), "oob_cnt": np.copy(oob_cnt)}
+
+        if sess is not None:
+            state = sess.resume()
+            if state is not None:
+                trees_done = int(state["trees_done"])
+                restore_forest(forest, state["forest"])
+                oob_sum[:] = state["oob_sum"]
+                oob_cnt[:] = state["oob_cnt"]
+
+        import contextlib
+        with (sess if sess is not None else contextlib.nullcontext()):
+            for b0 in range(trees_done, hp.num_trees, block):
+                ts = list(range(b0, min(b0 + block, hp.num_trees)))
+                counts_b, stats_b = [], []
+                for t in ts:
+                    if hp.bootstrap:
+                        counts = tree_rng[t].multinomial(
+                            N, np.full(N, 1.0 / N)).astype(np.float64)
+                    else:
+                        counts = np.ones(N)
+                    counts_b.append(counts)
+                    stats_b.append(base_stats * counts[:, None])
+                grow_trees(forest, ts, td.binned, td.X_raw, stats_b,
+                           [c > 0 for c in counts_b], leaf_fn, gp,
+                           [tree_rng[t] for t in ts], td.num_lo, td.num_hi,
+                           block=block)
+                if hp.compute_oob and hp.bootstrap:
+                    from repro.core.gbt import _one_tree
+                    for bi, t in enumerate(ts):
+                        oob = counts_b[bi] == 0
+                        if not oob.any():
+                            continue
+                        pr = predict_raw(_one_tree(forest, t), td.X_raw[oob])[:, 0]
+                        if hp.winner_take_all and out_dim > 1:
+                            vote = np.zeros_like(pr)
+                            vote[np.arange(len(pr)), pr.argmax(1)] = 1.0
+                            pr = vote
+                        oob_sum[oob] += pr
+                        oob_cnt[oob] += 1
+                trees_done = ts[-1] + 1
+                if sess is not None:
+                    complete = trees_done == hp.num_trees
+                    if not complete and sess.should_stop():
+                        interrupted = True
+                    sess.save(trees_done, _payload(complete), done=complete,
+                              force=complete or interrupted)
+                    if interrupted:
+                        break
+        if interrupted:
+            # servable truncated model: only fully-grown trees survive
+            forest = forest.truncated(max(trees_done, 1))
 
         self_eval = None
         if hp.compute_oob and hp.bootstrap and (oob_cnt > 0).any():
@@ -144,6 +183,9 @@ class RandomForestLearner(Learner):
         model.training_logs = {"growth_engine": engine_used,
                                "engine_fallback": fallback,
                                "tree_parallelism": block}
+        if sess is not None:
+            model.training_logs["resilience"] = sess.events
+            model.training_logs["interrupted"] = interrupted
         if self_eval is not None:
             # surface the OOB result (it was previously reachable only via
             # self_evaluation) and the per-example coverage
@@ -165,6 +207,6 @@ class RandomForestLearner(Learner):
             # not merely one of the same size.
             model.bag_info = {
                 "seed": self.seed & 0xFFFFFFFF, "n_rows": N,
-                "num_trees": hp.num_trees,
+                "num_trees": forest.n_trees,
                 "fingerprint": training_data_fingerprint(td.X_raw, td.y)}
         return model

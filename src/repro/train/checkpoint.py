@@ -1,0 +1,462 @@
+"""Checkpointed, interruption-safe training (DESIGN.md §11).
+
+The paper's *safety of use* principle says a library failure must never
+silently cost the user their work: YDF's distributed training checkpoints
+the boosting state so an interrupted or partially-failed run resumes instead
+of restarting. This module is that discipline for the whole training stack,
+with **bit-identical resume** as the invariant: a run interrupted at any
+tree boundary and resumed produces the exact same forest — byte for byte —
+as an uninterrupted run.
+
+Three layers:
+
+* **Atomic checkpoint store** — ``write_checkpoint``/``latest_checkpoint``.
+  A checkpoint is a directory ``ckpt-<trees>`` holding ``state.pkl`` (the
+  payload) and ``manifest.json`` (format version, trees-done, the learner's
+  train_config, the encoded-training-data fingerprint, and a content sha1
+  per payload file). Writes go write-temp → fsync → rename, so a crash
+  mid-write can never produce a half-visible checkpoint; reads verify the
+  sha1s and ROLL BACK to the previous good checkpoint when a file is
+  corrupt or truncated (the bad directory is renamed ``*.corrupt``, never
+  silently trusted).
+
+* **CheckpointSession** — the seam learners drive at tree boundaries:
+  ``resume()`` (verifies the dataset fingerprint and training config before
+  trusting any state — resuming against the wrong dataset is REJECTED, not
+  silently mis-trained), ``save()`` (every ``every_n_trees``, retention
+  ``keep_last``), and ``should_stop()`` (cooperative interruption: a
+  SIGINT/SIGTERM captured by the session, or a ``CheckpointPolicy.cancel``
+  callback). On interruption the learner finalizes a *valid, servable*
+  truncated model instead of raising mid-write. Every resume / rollback /
+  checkpoint / interruption is recorded as an event, surfaced in
+  ``model.training_logs["resilience"]``.
+
+* **resume_training(dir, dataset)** — rebuilds the learner from the
+  manifest's train_config and continues it against the same checkpoint
+  directory.
+
+What a checkpoint captures (the bit-identical-resume closure): trees grown
+so far (forest SoA slices), cached boosting predictions (train + validation),
+early-stopping bookkeeping, and the host RNG stream state
+(``Generator.bit_generator.state`` snapshotted at the tree boundary — GBT's
+bagging and stream-sampled growth draws continue mid-stream exactly where
+they stopped; RF's per-tree keyed streams need no state, they are re-derived
+from ``(seed, tree)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pickle
+import signal
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core.api import YdfError
+
+CHECKPOINT_FORMAT_VERSION = 1
+
+_CKPT_PREFIX = "ckpt-"
+_STATE_FILE = "state.pkl"
+_MANIFEST_FILE = "manifest.json"
+
+
+# ---------------------------------------------------------------- policy
+
+@dataclass(frozen=True)
+class CheckpointPolicy:
+    """Where and how often training checkpoints (DESIGN.md §11.1).
+
+    ``cancel`` is the cooperative-interruption probe: polled at every tree
+    boundary; returning True stops training AFTER the current tree, saves a
+    final checkpoint and finalizes a servable truncated model. SIGINT /
+    SIGTERM are captured to the same effect while a session is active.
+    """
+    directory: str
+    every_n_trees: int = 10
+    keep_last: int = 2
+    cancel: Callable[[], bool] | None = None
+
+    def to_manifest(self) -> dict:
+        return {"every_n_trees": int(self.every_n_trees),
+                "keep_last": int(self.keep_last)}
+
+
+def as_policy(checkpoint) -> CheckpointPolicy | None:
+    if checkpoint is None or isinstance(checkpoint, CheckpointPolicy):
+        return checkpoint
+    if isinstance(checkpoint, (str, os.PathLike)):
+        return CheckpointPolicy(os.fspath(checkpoint))
+    raise YdfError(
+        f"checkpoint must be a CheckpointPolicy or a directory path, got "
+        f"{type(checkpoint).__name__}. Example: "
+        "learner.train(ds, checkpoint=CheckpointPolicy('/tmp/ck', every_n_trees=10)).")
+
+
+# ---------------------------------------------------------------- store
+
+def _sha1(path: str) -> str:
+    h = hashlib.sha1()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:          # platforms without directory fds
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def checkpoint_name(trees_done: int) -> str:
+    return f"{_CKPT_PREFIX}{trees_done:08d}"
+
+
+def write_checkpoint(directory: str, trees_done: int, payload: dict, *,
+                     config: dict, fingerprint: str, done: bool = False,
+                     policy: CheckpointPolicy | None = None,
+                     keep_last: int = 2) -> str:
+    """Atomically write ``<directory>/ckpt-<trees_done>``.
+
+    Protocol: payload + manifest land in a ``.tmp-<pid>`` sibling, every
+    file is fsync'ed, then ONE rename publishes the checkpoint. A crash at
+    any point leaves either the previous state or a complete new checkpoint
+    — never a torn one. Old checkpoints beyond ``keep_last`` are removed
+    AFTER the new one is durable.
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, checkpoint_name(trees_done))
+    tmp = f"{final}.tmp-{os.getpid()}"
+    if os.path.exists(tmp):
+        import shutil
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    state_path = os.path.join(tmp, _STATE_FILE)
+    with open(state_path, "wb") as f:
+        pickle.dump(payload, f)
+        f.flush()
+        os.fsync(f.fileno())
+    manifest = {
+        "format_version": CHECKPOINT_FORMAT_VERSION,
+        "trees_done": int(trees_done),
+        "done": bool(done),
+        "config": config,
+        "data_fingerprint": fingerprint,
+        "files": {_STATE_FILE: _sha1(state_path)},
+        "policy": (policy.to_manifest() if policy is not None
+                   else {"every_n_trees": 10, "keep_last": keep_last}),
+    }
+    mpath = os.path.join(tmp, _MANIFEST_FILE)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):      # same-boundary overwrite: replace whole
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _fsync_dir(directory)
+    _gc(directory, keep_last)
+    return final
+
+
+def _gc(directory: str, keep_last: int) -> None:
+    entries = sorted(_list_checkpoints(directory))
+    for _, name in entries[:-max(1, keep_last)]:
+        import shutil
+        shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
+
+
+def _list_checkpoints(directory: str) -> list[tuple[int, str]]:
+    out = []
+    try:
+        names = os.listdir(directory)
+    except FileNotFoundError:
+        return out
+    for name in names:
+        if not name.startswith(_CKPT_PREFIX) or "." in name:
+            continue                      # skips *.tmp-* and *.corrupt
+        try:
+            out.append((int(name[len(_CKPT_PREFIX):]), name))
+        except ValueError:
+            continue
+    return out
+
+
+def _validate(path: str) -> dict | None:
+    """Manifest of a checkpoint directory iff every content sha1 matches;
+    None when missing/corrupt/truncated."""
+    try:
+        with open(os.path.join(path, _MANIFEST_FILE)) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if not isinstance(manifest, dict) or \
+            manifest.get("format_version", 1 << 30) > CHECKPOINT_FORMAT_VERSION:
+        return None
+    for fname, digest in manifest.get("files", {}).items():
+        fpath = os.path.join(path, fname)
+        if not os.path.exists(fpath) or _sha1(fpath) != digest:
+            return None
+    return manifest
+
+
+def latest_checkpoint(directory: str
+                      ) -> tuple[dict | None, dict | None, list[str]]:
+    """(payload, manifest, rolled_back_names) of the newest VALID checkpoint.
+
+    Newer checkpoints that fail validation (corrupt manifest, sha1 mismatch
+    from a truncated write) are renamed ``<name>.corrupt`` — evidence kept,
+    never re-trusted — and the previous good checkpoint wins.
+    """
+    rolled_back: list[str] = []
+    for _, name in sorted(_list_checkpoints(directory), reverse=True):
+        path = os.path.join(directory, name)
+        manifest = _validate(path)
+        if manifest is None:
+            quarantine = path + ".corrupt"
+            if os.path.exists(quarantine):
+                import shutil
+                shutil.rmtree(quarantine, ignore_errors=True)
+            os.rename(path, quarantine)
+            rolled_back.append(name)
+            continue
+        try:
+            with open(os.path.join(path, _STATE_FILE), "rb") as f:
+                payload = pickle.load(f)
+        except Exception:                # sha1 passed but unpickle failed
+            os.rename(path, path + ".corrupt")
+            rolled_back.append(name)
+            continue
+        return payload, manifest, rolled_back
+    return None, None, rolled_back
+
+
+# ---------------------------------------------------------------- forest I/O
+
+_FOREST_KEYS = ("feature", "threshold", "split_bin", "cat_mask", "left_child",
+                "leaf_value", "n_nodes", "split_gain", "obl_weights",
+                "obl_features", "tree_class")
+
+
+def forest_payload(forest, n_trees: int) -> dict:
+    """Copy the first ``n_trees`` trees of a Forest SoA into a plain dict
+    (the grown-so-far state; independent of the preallocated capacity)."""
+    out: dict[str, Any] = {"depth": int(forest.depth)}
+    for k in _FOREST_KEYS:
+        a = getattr(forest, k)
+        out[k] = None if a is None else np.copy(a[:n_trees])
+    return out
+
+
+def restore_forest(forest, payload: dict) -> int:
+    """Write a ``forest_payload`` back into a preallocated Forest. Returns
+    the number of trees restored."""
+    n = payload["feature"].shape[0]
+    for k in _FOREST_KEYS:
+        v = payload[k]
+        a = getattr(forest, k)
+        if v is None or a is None:
+            continue
+        a[:n] = v
+    forest.depth = max(forest.depth, payload["depth"])
+    return n
+
+
+# ---------------------------------------------------------------- session
+
+def _normalize_config(config: dict) -> dict:
+    return json.loads(json.dumps(config))
+
+
+class CheckpointSession:
+    """The tree-boundary checkpoint seam a training loop drives.
+
+    Use as a context manager so SIGINT/SIGTERM become cooperative
+    interruptions (flag checked at tree boundaries) instead of mid-write
+    crashes; previous handlers are restored on exit and the signal is
+    re-raised if it arrived outside the training window's control (second
+    Ctrl-C still kills).
+    """
+
+    def __init__(self, policy: CheckpointPolicy, *, config: dict,
+                 fingerprint: str):
+        self.policy = policy
+        self.config = _normalize_config(config)
+        self.fingerprint = fingerprint
+        self.events: list[dict] = []
+        self.last_saved = 0
+        self._interrupted = False
+        self._prev_handlers: dict[int, Any] = {}
+
+    # -- signals ------------------------------------------------------
+    def __enter__(self) -> "CheckpointSession":
+        if threading.current_thread() is threading.main_thread():
+            for sig in (signal.SIGINT, signal.SIGTERM):
+                try:
+                    self._prev_handlers[sig] = signal.signal(
+                        sig, self._on_signal)
+                except (ValueError, OSError):
+                    pass
+        return self
+
+    def __exit__(self, *exc) -> None:
+        for sig, h in self._prev_handlers.items():
+            try:
+                signal.signal(sig, h)
+            except (ValueError, OSError):
+                pass
+        self._prev_handlers.clear()
+
+    def _on_signal(self, signum, frame) -> None:
+        self._interrupted = True
+        self.events.append({"event": "signal", "signal": int(signum)})
+
+    # -- lifecycle ----------------------------------------------------
+    def should_stop(self) -> bool:
+        if self._interrupted:
+            return True
+        cb = self.policy.cancel
+        if cb is not None and cb():
+            self._interrupted = True
+            self.events.append({"event": "cancel"})
+            return True
+        return False
+
+    @property
+    def interrupted(self) -> bool:
+        return self._interrupted
+
+    def resume(self) -> dict | None:
+        """The newest valid checkpoint's payload, or None for a fresh run.
+
+        Rejects (YdfError with directions, nothing loaded) when the stored
+        encoded-data fingerprint or training config does not match — a
+        checkpoint must never silently continue onto the wrong dataset or
+        under different hyper-parameters.
+        """
+        payload, manifest, rolled_back = latest_checkpoint(
+            self.policy.directory)
+        # quarantines newer than the loaded checkpoint count as rollbacks
+        # even when an earlier reader (resume_training's manifest pre-read)
+        # did the renaming before this session opened
+        base = manifest["trees_done"] if manifest is not None else -1
+        try:
+            for name in os.listdir(self.policy.directory):
+                if not name.endswith(".corrupt"):
+                    continue
+                stem = name[: -len(".corrupt")]
+                try:
+                    n = int(stem[len(_CKPT_PREFIX):])
+                except ValueError:
+                    continue
+                if n > base and stem not in rolled_back:
+                    rolled_back.append(stem)
+        except FileNotFoundError:
+            pass
+        for name in rolled_back:
+            self.events.append({"event": "rollback", "checkpoint": name,
+                                "reason": "corrupt or truncated"})
+        if payload is None:
+            return None
+        if manifest["data_fingerprint"] != self.fingerprint:
+            raise YdfError(
+                f"Checkpoint at {self.policy.directory!r} was written for a "
+                "DIFFERENT dataset (encoded-data fingerprint "
+                f"{manifest['data_fingerprint'][:12]}… != "
+                f"{self.fingerprint[:12]}…). Resuming would silently mis-train. "
+                "Solutions: (1) pass the original training dataset, or (2) "
+                "point checkpoint.directory at a fresh directory to train "
+                "from scratch.")
+        if manifest["config"] != self.config:
+            raise YdfError(
+                f"Checkpoint at {self.policy.directory!r} was written under a "
+                "different training configuration (learner / hyper-parameters "
+                "/ seed changed). Bit-identical resume is impossible. "
+                "Solutions: (1) recreate the learner with the original "
+                "configuration (see resume_training), or (2) use a fresh "
+                "checkpoint directory.")
+        self.last_saved = manifest["trees_done"]
+        self.events.append({"event": "resume",
+                            "trees_done": manifest["trees_done"],
+                            "done": manifest["done"]})
+        return payload
+
+    def save(self, trees_done: int, payload: dict, *, done: bool = False,
+             force: bool = False) -> bool:
+        """Checkpoint iff the cadence (``every_n_trees``) is due or forced.
+        Returns True when a checkpoint was written."""
+        if not force and trees_done - self.last_saved < self.policy.every_n_trees:
+            return False
+        if trees_done <= 0:
+            return False
+        write_checkpoint(self.policy.directory, trees_done, payload,
+                         config=self.config, fingerprint=self.fingerprint,
+                         done=done, policy=self.policy,
+                         keep_last=self.policy.keep_last)
+        self.last_saved = trees_done
+        self.events.append({"event": "checkpoint", "trees_done": trees_done,
+                            "done": done})
+        return True
+
+
+def open_session(checkpoint, config: dict,
+                 fingerprint: str) -> CheckpointSession | None:
+    """Session from a ``Learner.train(checkpoint=...)`` argument (None, a
+    directory path, or a CheckpointPolicy)."""
+    policy = as_policy(checkpoint)
+    if policy is None:
+        return None
+    return CheckpointSession(policy, config=config, fingerprint=fingerprint)
+
+
+# ---------------------------------------------------------------- resume
+
+def resume_training(directory: str, dataset, valid=None):
+    """Continue an interrupted training run from its checkpoint directory.
+
+    The learner is rebuilt from the manifest's cross-API train_config
+    (§3.10), so the caller supplies only the (same) dataset. The finished
+    model is bit-identical to an uninterrupted run (tested).
+    """
+    _, manifest, _ = latest_checkpoint(directory)
+    if manifest is None:
+        raise YdfError(
+            f"No valid checkpoint found in {directory!r}. A checkpoint "
+            "directory is created by learner.train(..., checkpoint="
+            "CheckpointPolicy(dir)). Solutions: (1) check the path, or (2) "
+            "start a fresh training run with a checkpoint policy.")
+    config = manifest["config"]
+    if "learner" not in config:
+        raise YdfError(
+            f"Checkpoint at {directory!r} was not written by a Learner "
+            f"(config: {sorted(config)}). Use the owning trainer's resume "
+            "path (e.g. DistributedGBT.fit(checkpoint=...)).")
+    from repro.core.api import make_learner
+    learner = make_learner(config)
+    pol = manifest.get("policy", {})
+    policy = CheckpointPolicy(directory,
+                              every_n_trees=pol.get("every_n_trees", 10),
+                              keep_last=pol.get("keep_last", 2))
+    return learner.train(dataset, valid, checkpoint=policy)

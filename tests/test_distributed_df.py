@@ -32,12 +32,21 @@ for name, m in [("2x4", m_24), ("8x1(example-par)", m_81), ("1x8(feature-par)", 
 acc = ((s > 0) == y).mean()
 assert acc > 0.62, acc
 
-# resume mid-forest == straight run
-half = DistributedGBT(DistGBTConfig(max_depth=4, n_bins=64, num_trees=4),
-                      jax.make_mesh((2, 4), ("data", "model"))).fit(codes, y)
-st = half.state_dict(); st["pred"] = half.predict_scores(codes)
-m_res = DistributedGBT(cfg, jax.make_mesh((2, 4), ("data", "model"))).fit(
-    codes, y, resume_state=st)
+# interrupt mid-forest via the §11 checkpoint layer, resume on a DIFFERENT
+# mesh shape == straight run (checkpoints are mesh-placement-invariant)
+import tempfile
+from repro.train.checkpoint import CheckpointPolicy
+ckdir = tempfile.mkdtemp()
+calls = {"n": 0}
+def cancel():
+    calls["n"] += 1
+    return calls["n"] >= 4
+half = DistributedGBT(cfg, jax.make_mesh((2, 4), ("data", "model"))).fit(
+    codes, y, checkpoint=CheckpointPolicy(ckdir, every_n_trees=2, cancel=cancel))
+assert half.training_logs["interrupted"] and len(half.trees) < cfg.num_trees
+m_res = DistributedGBT(cfg, jax.make_mesh((8, 1), ("data", "model"))).fit(
+    codes, y, checkpoint=CheckpointPolicy(ckdir))
+assert not m_res.training_logs["interrupted"]
 assert np.allclose(s, m_res.predict_scores(codes), atol=1e-4)
 
 # pointer-forest conversion serves identically

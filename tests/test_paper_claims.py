@@ -92,8 +92,15 @@ def test_c4_gbt_smaller_and_faster_than_rf():
     from repro.core.engines import compile_model
     for m in (gbt, rf):
         m.compile("vectorized")
-    t0 = time.perf_counter(); gbt._scores(test); t_g = time.perf_counter() - t0
-    t0 = time.perf_counter(); rf._scores(test); t_r = time.perf_counter() - t0
+    # interleaved best-of-N timing: a single sample each is a race against
+    # scheduler noise in a full-suite run (flaked in PR 7); the best of
+    # several alternated repetitions compares the engines' floors instead
+    t_g = t_r = np.inf
+    for _ in range(5):
+        t0 = time.perf_counter(); gbt._scores(test)
+        t_g = min(t_g, time.perf_counter() - t0)
+        t0 = time.perf_counter(); rf._scores(test)
+        t_r = min(t_r, time.perf_counter() - t0)
     assert t_g < t_r  # fewer+shallower trees infer faster
 
 

@@ -1,0 +1,407 @@
+"""Checkpointed, interruption-safe training (DESIGN.md §11).
+
+The invariant under test is BIT-IDENTICAL RESUME: a run interrupted at any
+tree boundary and resumed produces np.array_equal forest arrays and
+byte-stable predictions vs an uninterrupted run — across {GBT, RF} x
+{classification, regression} x {host batched, device} engines, plus CART's
+grown/pruned two-stage boundary. The store itself is exercised adversarially:
+corrupt/truncated checkpoints roll back to the previous good one, resuming
+against the wrong dataset or config is rejected, retention honors keep_last.
+The distributed simulation backend must survive seeded multi-death fault
+plans with a forest bit-identical to the clean run.
+"""
+import os
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core import GradientBoostedTreesLearner, RandomForestLearner
+from repro.core.api import Task, YdfError
+from repro.core.cart import CartLearner
+from repro.data.tabular import adult_like
+from repro.train.checkpoint import (
+    CheckpointPolicy,
+    checkpoint_name,
+    latest_checkpoint,
+    resume_training,
+)
+
+pytestmark = pytest.mark.resilience
+
+
+def _cls_data():
+    return adult_like(300, seed=5)
+
+
+def _reg_data():
+    rng = np.random.default_rng(7)
+    x = rng.uniform(-3, 3, 400)
+    z = rng.normal(size=400)
+    y = np.sin(x) * 2 + 0.5 * z + rng.normal(scale=0.1, size=400)
+    return {"x": x.astype(object), "z": z.astype(object),
+            "y": y.astype(object)}
+
+
+def _learner(kind, task, engine, **over):
+    label = "income" if task == Task.CLASSIFICATION else "y"
+    kw = dict(label=label, task=task, seed=11, growth_engine=engine,
+              max_depth=3, num_trees=6)
+    kw.update(over)
+    if kind == "gbt":
+        return GradientBoostedTreesLearner(**kw)
+    # block = 2 so the 6-tree run has interior lockstep boundaries to
+    # checkpoint/interrupt at (RF only checkpoints between blocks)
+    kw.setdefault("tree_parallelism", 2)
+    return RandomForestLearner(**kw)
+
+
+def _cancel_after(n):
+    calls = {"n": 0}
+
+    def cancel():
+        calls["n"] += 1
+        return calls["n"] >= n
+    return cancel
+
+
+FOREST_ARRAYS = ("feature", "threshold", "split_bin", "cat_mask",
+                 "left_child", "leaf_value", "n_nodes", "split_gain")
+
+
+def assert_forests_bit_identical(a, b):
+    assert a.n_trees == b.n_trees
+    for k in FOREST_ARRAYS:
+        np.testing.assert_array_equal(getattr(a, k), getattr(b, k), err_msg=k)
+
+
+# ------------------------------------------------------------ kill & resume
+
+@pytest.mark.parametrize("engine", ["batched", "device"])
+@pytest.mark.parametrize("task", [Task.CLASSIFICATION, Task.REGRESSION],
+                         ids=["cls", "reg"])
+@pytest.mark.parametrize("kind", ["gbt", "rf"])
+def test_kill_and_resume_bit_identical(kind, task, engine, tmp_path):
+    ds = _cls_data() if task == Task.CLASSIFICATION else _reg_data()
+    clean = _learner(kind, task, engine).train(ds)
+
+    ckdir = str(tmp_path / "ck")
+    # 2nd poll: GBT stops after tree 2, RF (block=2) after tree 4 — both
+    # interior boundaries of the 6-tree run
+    policy = CheckpointPolicy(ckdir, every_n_trees=2, keep_last=2,
+                              cancel=_cancel_after(2))
+    part = _learner(kind, task, engine).train(ds, checkpoint=policy)
+    assert part.training_logs["interrupted"]
+    # the truncated model is servable and strictly shorter than the full run
+    assert 0 < part.forest.n_trees < clean.forest.n_trees
+    assert np.isfinite(part.predict(ds)).all()
+
+    resumed = resume_training(ckdir, ds)
+    assert not resumed.training_logs["interrupted"]
+    assert any(e["event"] == "resume"
+               for e in resumed.training_logs["resilience"])
+    assert_forests_bit_identical(clean.forest, resumed.forest)
+    assert clean.predict(ds).tobytes() == resumed.predict(ds).tobytes()
+
+
+def test_cart_grown_stage_resume(tmp_path):
+    ds = _cls_data()
+    clean = CartLearner(label="income", seed=11, max_depth=4).train(ds)
+    ckdir = str(tmp_path / "ck")
+    part = CartLearner(label="income", seed=11, max_depth=4).train(
+        ds, checkpoint=CheckpointPolicy(ckdir, cancel=lambda: True))
+    # interrupted between growth and pruning: servable, pruning pending
+    assert part.training_logs["interrupted"]
+    assert np.isfinite(part.predict(ds)).all()
+    resumed = resume_training(ckdir, ds)
+    assert_forests_bit_identical(clean.forest, resumed.forest)
+    assert clean.predict(ds).tobytes() == resumed.predict(ds).tobytes()
+
+
+def test_sigint_becomes_cooperative_interruption(tmp_path):
+    """A SIGINT mid-training must not raise KeyboardInterrupt: the session
+    captures it, training stops at the next tree boundary with a final
+    checkpoint, and the resumed run is bit-identical to a clean one."""
+    ds = _cls_data()
+    clean = _learner("gbt", Task.CLASSIFICATION, "batched").train(ds)
+    ckdir = str(tmp_path / "ck")
+    before = signal.getsignal(signal.SIGINT)
+    calls = {"n": 0}
+
+    def fire_sigint():                       # delivered between boundaries
+        calls["n"] += 1
+        if calls["n"] == 2:
+            os.kill(os.getpid(), signal.SIGINT)
+        return False
+
+    policy = CheckpointPolicy(ckdir, every_n_trees=2, cancel=fire_sigint)
+    part = _learner("gbt", Task.CLASSIFICATION, "batched").train(
+        ds, checkpoint=policy)             # must NOT raise
+    assert part.training_logs["interrupted"]
+    assert any(e["event"] == "signal"
+               for e in part.training_logs["resilience"])
+    # the pre-training handler is restored after the session
+    assert signal.getsignal(signal.SIGINT) is before
+    resumed = resume_training(ckdir, ds)
+    assert_forests_bit_identical(clean.forest, resumed.forest)
+
+
+def test_gbt_early_stopping_survives_resume(tmp_path):
+    """Early-stopping bookkeeping (best_loss/best_t, the validation
+    predictions) is part of the checkpoint closure: resuming mid-run must
+    reproduce the clean run's best_t truncation exactly."""
+    ds = _cls_data()
+    kw = dict(label="income", seed=3, num_trees=40, max_depth=2,
+              early_stopping="LOSS_INCREASE", early_stopping_patience=3,
+              validation_ratio=0.2)
+    clean = GradientBoostedTreesLearner(**kw).train(ds)
+    ckdir = str(tmp_path / "ck")
+    policy = CheckpointPolicy(ckdir, every_n_trees=3, cancel=_cancel_after(5))
+    part = GradientBoostedTreesLearner(**kw).train(ds, checkpoint=policy)
+    assert part.training_logs["interrupted"]
+    resumed = resume_training(ckdir, ds)
+    assert_forests_bit_identical(clean.forest, resumed.forest)
+    assert clean.training_logs["valid_loss"] == resumed.training_logs["valid_loss"]
+
+
+def test_resume_of_finished_run_returns_same_model(tmp_path):
+    ds = _reg_data()
+    ckdir = str(tmp_path / "ck")
+    policy = CheckpointPolicy(ckdir, every_n_trees=2)
+    first = _learner("rf", Task.REGRESSION, "batched").train(
+        ds, checkpoint=policy)
+    _, manifest, _ = latest_checkpoint(ckdir)
+    assert manifest["done"]
+    again = resume_training(ckdir, ds)     # grows nothing, rebuilds the model
+    assert_forests_bit_identical(first.forest, again.forest)
+
+
+# ------------------------------------------------------------ store hardening
+
+def test_corrupt_checkpoint_rolls_back_to_previous_good(tmp_path):
+    ds = _cls_data()
+    clean = _learner("gbt", Task.CLASSIFICATION, "batched").train(ds)
+    ckdir = str(tmp_path / "ck")
+    policy = CheckpointPolicy(ckdir, every_n_trees=1, keep_last=3,
+                              cancel=_cancel_after(4))
+    _learner("gbt", Task.CLASSIFICATION, "batched").train(
+        ds, checkpoint=policy)
+    names = sorted(n for n in os.listdir(ckdir) if "." not in n)
+    assert len(names) == 3
+    # truncate the newest state file mid-byte: sha1 mismatch on read
+    newest = os.path.join(ckdir, names[-1], "state.pkl")
+    with open(newest, "rb") as f:
+        blob = f.read()
+    with open(newest, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+
+    resumed = resume_training(ckdir, ds)
+    events = resumed.training_logs["resilience"]
+    assert any(e["event"] == "rollback" and e["checkpoint"] == names[-1]
+               for e in events)
+    # evidence quarantined, never re-trusted
+    assert os.path.isdir(os.path.join(ckdir, names[-1] + ".corrupt"))
+    # ... and the run still finishes bit-identical from the previous good one
+    assert_forests_bit_identical(clean.forest, resumed.forest)
+
+
+def test_all_checkpoints_corrupt_is_a_clear_error(tmp_path):
+    ds = _cls_data()
+    ckdir = str(tmp_path / "ck")
+    policy = CheckpointPolicy(ckdir, every_n_trees=2, cancel=_cancel_after(3))
+    _learner("gbt", Task.CLASSIFICATION, "batched").train(
+        ds, checkpoint=policy)
+    for name in list(os.listdir(ckdir)):
+        if "." in name:
+            continue
+        with open(os.path.join(ckdir, name, "manifest.json"), "w") as f:
+            f.write("{ not json")
+    with pytest.raises(YdfError, match="No valid checkpoint"):
+        resume_training(ckdir, ds)
+
+
+def test_wrong_dataset_is_rejected(tmp_path):
+    ds = _cls_data()
+    ckdir = str(tmp_path / "ck")
+    policy = CheckpointPolicy(ckdir, every_n_trees=2, cancel=_cancel_after(3))
+    _learner("gbt", Task.CLASSIFICATION, "batched").train(
+        ds, checkpoint=policy)
+    other = adult_like(300, seed=99)       # same shape, different rows
+    with pytest.raises(YdfError, match="DIFFERENT dataset"):
+        resume_training(ckdir, other)
+
+
+def test_changed_config_is_rejected(tmp_path):
+    ds = _cls_data()
+    ckdir = str(tmp_path / "ck")
+    policy = CheckpointPolicy(ckdir, every_n_trees=2, cancel=_cancel_after(3))
+    _learner("gbt", Task.CLASSIFICATION, "batched").train(
+        ds, checkpoint=policy)
+    with pytest.raises(YdfError, match="different training configuration"):
+        _learner("gbt", Task.CLASSIFICATION, "batched", num_trees=9).train(
+            ds, checkpoint=CheckpointPolicy(ckdir))
+
+
+def test_retention_keeps_last_k(tmp_path):
+    ds = _reg_data()
+    ckdir = str(tmp_path / "ck")
+    policy = CheckpointPolicy(ckdir, every_n_trees=1, keep_last=2)
+    _learner("rf", Task.REGRESSION, "batched", tree_parallelism=1).train(
+        ds, checkpoint=policy)
+    names = sorted(n for n in os.listdir(ckdir) if "." not in n)
+    assert names == [checkpoint_name(5), checkpoint_name(6)]
+
+
+# ------------------------------------------------------------ atomic save
+
+def test_model_save_is_atomic_under_mid_write_crash(tmp_path, monkeypatch):
+    ds = _cls_data()
+    m1 = _learner("gbt", Task.CLASSIFICATION, "batched").train(ds)
+    m2 = _learner("gbt", Task.CLASSIFICATION, "batched", num_trees=3).train(ds)
+    target = str(tmp_path / "model")
+    m1.save(target)
+
+    from repro.core.api import Model
+    orig = Model._write_model_dir
+
+    def crash_mid_write(self, path):
+        orig(self, path)
+        os.remove(os.path.join(path, "model.pkl"))   # torn state in the tmp
+        raise RuntimeError("simulated crash mid-save")
+
+    monkeypatch.setattr(Model, "_write_model_dir", crash_mid_write)
+    with pytest.raises(RuntimeError):
+        m2.save(target)
+    monkeypatch.undo()
+    # the target still holds the COMPLETE previous model, and no tmp junk
+    loaded = Model.load(target)
+    assert loaded.forest.n_trees == m1.forest.n_trees
+    assert not [n for n in os.listdir(tmp_path) if ".tmp-" in n]
+
+
+def test_model_save_refuses_to_clobber_foreign_directory(tmp_path):
+    ds = _cls_data()
+    m = _learner("gbt", Task.CLASSIFICATION, "batched", num_trees=2).train(ds)
+    victim = tmp_path / "precious"
+    victim.mkdir()
+    (victim / "thesis.txt").write_text("years of work")
+    with pytest.raises(YdfError, match="Refusing to overwrite"):
+        m.save(str(victim))
+    assert (victim / "thesis.txt").read_text() == "years of work"
+
+
+def test_model_save_overwrites_previous_model_in_place(tmp_path):
+    ds = _cls_data()
+    m1 = _learner("gbt", Task.CLASSIFICATION, "batched", num_trees=2).train(ds)
+    m2 = _learner("gbt", Task.CLASSIFICATION, "batched").train(ds)
+    from repro.core.api import Model
+    target = str(tmp_path / "model")
+    m1.save(target)
+    m2.save(target)                        # replacing a model dir is allowed
+    assert Model.load(target).forest.n_trees == m2.forest.n_trees
+
+
+# ------------------------------------------------------------ distributed
+
+def _sim_setup(num_trees=8):
+    from repro.core.distributed import DistGBTConfig
+    rng = np.random.default_rng(1)
+    N, F = 512, 6
+    codes = rng.integers(0, 32, (N, F)).astype(np.uint8)
+    y = (codes[:, 1] > 15).astype(np.float64)
+    cfg = DistGBTConfig(max_depth=3, n_bins=32, num_trees=num_trees)
+    return codes, y, cfg
+
+
+def _trees_equal(a, b):
+    return len(a) == len(b) and all(
+        np.array_equal(ta[k], tb[k]) for ta, tb in zip(a, b) for k in ta)
+
+
+def test_simulated_cluster_multi_death_soak_bit_identical():
+    """Seeded FaultPlan soak: scheduled + Bernoulli worker deaths across the
+    run (>= 2 of them, some mid-level) must leave the forest bit-identical
+    to the clean run — deaths only cost a level restart, never accuracy."""
+    from repro.core.distributed import SimulatedCluster, WorkerFaultPlan
+    codes, y, cfg = _sim_setup()
+    clean = SimulatedCluster(codes, 6, cfg, seed=0).fit(y)
+
+    plan = WorkerFaultPlan(seed=5, deaths=((1, 1, 0), (4, 2, 3)),
+                           death_rate=0.02)
+    faulted = SimulatedCluster(codes, 6, cfg, seed=0, fault_plan=plan).fit(y)
+    deaths = [e for e in faulted.training_logs["resilience"]
+              if e["event"] == "worker_death"]
+    restarts = [e for e in faulted.training_logs["resilience"]
+                if e["event"] == "level_restart"]
+    assert len(deaths) >= 2 and restarts
+    assert _trees_equal(clean.trees, faulted.trees)
+    assert clean.predict_scores(codes).tobytes() == \
+        faulted.predict_scores(codes).tobytes()
+
+
+def test_simulated_cluster_checkpoint_resume(tmp_path):
+    from repro.core.distributed import SimulatedCluster
+    codes, y, cfg = _sim_setup()
+    clean = SimulatedCluster(codes, 4, cfg, seed=0).fit(y)
+    ckdir = str(tmp_path / "ck")
+    part = SimulatedCluster(codes, 4, cfg, seed=0).fit(
+        y, checkpoint=CheckpointPolicy(ckdir, every_n_trees=2,
+                                       cancel=_cancel_after(3)))
+    assert part.training_logs["interrupted"]
+    assert 0 < len(part.trees) < cfg.num_trees
+    resumed = SimulatedCluster(codes, 4, cfg, seed=0).fit(
+        y, checkpoint=CheckpointPolicy(ckdir))
+    assert _trees_equal(clean.trees, resumed.trees)
+
+
+def test_simulated_cluster_wrong_data_rejected(tmp_path):
+    from repro.core.distributed import SimulatedCluster
+    codes, y, cfg = _sim_setup()
+    ckdir = str(tmp_path / "ck")
+    SimulatedCluster(codes, 4, cfg, seed=0).fit(
+        y, checkpoint=CheckpointPolicy(ckdir, every_n_trees=2,
+                                       cancel=_cancel_after(3)))
+    with pytest.raises(YdfError, match="DIFFERENT dataset"):
+        SimulatedCluster(codes, 4, cfg, seed=0).fit(
+            1.0 - y, checkpoint=CheckpointPolicy(ckdir))
+
+
+def test_learner_resume_refuses_trainer_checkpoint(tmp_path):
+    """A SimulatedCluster checkpoint has no 'learner' key: the generic
+    resume_training entry point must reject it with directions instead of
+    crashing into make_learner."""
+    from repro.core.distributed import SimulatedCluster
+    codes, y, cfg = _sim_setup()
+    ckdir = str(tmp_path / "ck")
+    SimulatedCluster(codes, 4, cfg, seed=0).fit(
+        y, checkpoint=CheckpointPolicy(ckdir, every_n_trees=2,
+                                       cancel=_cancel_after(3)))
+    with pytest.raises(YdfError, match="not written by a Learner"):
+        resume_training(ckdir, _cls_data())
+
+
+# ------------------------------------------------------------ CLI
+
+def test_cli_train_checkpoint_and_resume(tmp_path, capsys):
+    from repro.cli import main
+    from repro.data.io import write_dataset
+    ds = _cls_data()
+    csv_path = f"csv:{tmp_path}/train.csv"
+    write_dataset(ds, csv_path)
+
+    ckdir = str(tmp_path / "ck")
+    out1 = str(tmp_path / "m1")
+    main(["train", "--dataset", csv_path, "--label", "income",
+          "--learner", "GRADIENT_BOOSTED_TREES", "--seed", "11",
+          "--hparam", "num_trees=4", "--hparam", "max_depth=3",
+          "--output", out1, "--checkpoint-dir", ckdir,
+          "--checkpoint-every", "2"])
+    assert os.path.isdir(ckdir) and os.listdir(ckdir)
+
+    out2 = str(tmp_path / "m2")
+    main(["train", "--dataset", csv_path, "--label", "income",
+          "--resume", ckdir, "--output", out2])
+    assert "resumed from" in capsys.readouterr().out
+    from repro.core import Model
+    m1, m2 = Model.load(out1), Model.load(out2)
+    assert_forests_bit_identical(m1.forest, m2.forest)
