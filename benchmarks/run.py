@@ -12,6 +12,8 @@
   analyze_bench   — DESIGN.md §8 permutation importance: compiled
                     batched-replica path vs naive per-feature loop
                     (BENCH_analyze.json when run as a module; quick here)
+  rank_bench      — DESIGN.md §12 group-batched LambdaMART lambda pass vs
+                    per-group loop (BENCH_rank.json when run as a module)
   serve_bench     — DESIGN.md §9 fault-tolerant front-end: p50/p99 latency
                     vs offered QPS, clean vs fault-injected
                     (BENCH_serve.json when run as a module; --quick here)
@@ -30,7 +32,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import accuracy_rank, analyze_bench, distributed_df, \
-        engines_bench, infer_bench, serve_bench, speed, train_bench
+        engines_bench, infer_bench, rank_bench, serve_bench, speed, \
+        train_bench
 
     t_all = time.time()
     if "speed" not in args.skip:
@@ -74,6 +77,12 @@ def main() -> None:
         print(f"  headline: {res['speedup']:.2f}x batched replicas vs naive "
               "loop at this small config (full 300-tree run: python -m "
               "benchmarks.analyze_bench)")
+    if "rank" not in args.skip:
+        print("== LambdaMART lambda pass (DESIGN.md §12) ==", flush=True)
+        res = rank_bench.run(n_groups=400, reps=2)
+        print(f"  headline: {res['headline_speedup']:.2f}x group-batched vs "
+              f"per-group loop, agreement<=1e-12: {res['all_agree_1e12']} "
+              "(full run: python -m benchmarks.rank_bench)")
     if "distributed" not in args.skip:
         print("== distributed DF traffic (paper §3.9) ==", flush=True)
         distributed_df.run()

@@ -78,7 +78,10 @@ def _chunked(fn, X: np.ndarray, row_budget: int) -> np.ndarray:
 
 def _example_scores(task: Task, out: np.ndarray, y: np.ndarray) -> np.ndarray:
     """Per-example contributions the primary metric is a function of:
-    correctness for classification, squared error for regression."""
+    correctness for classification, squared error for every scalar-output
+    task (regression, and — as a proxy — ranking scores vs graded
+    relevance, uplift effects vs outcome, anomaly scores vs indicator;
+    the task-true metric still appears in the baseline Evaluation)."""
     if task == Task.CLASSIFICATION:
         return (np.asarray(out).argmax(1) == y).astype(np.float64)
     return np.square(np.asarray(out).reshape(-1).astype(np.float64) - y)
@@ -142,9 +145,10 @@ def permutation_importances(model, dataset, *, repetitions: int = 3,
                 if bundle is not None
                 else lambda Z: _chunked(pred.predict_encoded, Z, row_budget))
     base_out = dispatch(X)
+    from repro.core.api import _evaluation_extras
     baseline = evaluate_predictions(
         model.task, base_out, y, classes=getattr(model, "classes", None),
-        source="analysis")
+        source="analysis", **_evaluation_extras(model, dataset))
     s_base = _example_scores(model.task, base_out, y)
 
     pairs = [(j, r) for j in range(F) for r in range(repetitions)]

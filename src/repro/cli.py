@@ -82,8 +82,15 @@ def cmd_train(args):
         if v in ("true", "false", "True", "False"):
             v = str(v).lower() == "true"
         hparams[k] = v
-    cls = get_learner(args.learner)
-    kw = dict(label=args.label, task=Task(args.task), seed=args.seed, **hparams)
+    task = Task(args.task.upper())
+    learner_name = args.learner
+    if args.learner == "GRADIENT_BOOSTED_TREES":
+        # the flag default; tasks with a dedicated learner re-route
+        learner_name = {Task.UPLIFT: "UPLIFT_TREES",
+                        Task.ANOMALY: "ISOLATION_FOREST"}.get(task,
+                                                              args.learner)
+    cls = get_learner(learner_name)
+    kw = dict(label=args.label, task=task, seed=args.seed, **hparams)
     if args.template:
         kw["template"] = args.template
     learner = cls(**kw)
@@ -252,7 +259,10 @@ def main(argv=None):
     p.add_argument("--dataset", required=True)
     p.add_argument("--valid")
     p.add_argument("--label", required=True)
-    p.add_argument("--task", default="CLASSIFICATION")
+    p.add_argument("--task", default="CLASSIFICATION",
+                   help="CLASSIFICATION | REGRESSION | ranking | uplift | "
+                        "anomaly (case-insensitive; uplift/anomaly pick "
+                        "their dedicated learner automatically)")
     p.add_argument("--learner", default="GRADIENT_BOOSTED_TREES")
     p.add_argument("--template")
     p.add_argument("--seed", type=int, default=1234)

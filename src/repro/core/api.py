@@ -32,6 +32,8 @@ class Task(enum.Enum):
     CLASSIFICATION = "CLASSIFICATION"
     REGRESSION = "REGRESSION"
     RANKING = "RANKING"
+    UPLIFT = "UPLIFT"
+    ANOMALY = "ANOMALY"
 
 
 class YdfError(ValueError):
@@ -75,15 +77,21 @@ class Model(abc.ABC):
         if self.task != Task.CLASSIFICATION:
             raise YdfError(
                 f"predict_class requires a classification model, got task={self.task}. "
-                "Use predict() for regression/ranking predictions.")
+                "Use predict() for regression/ranking scores, uplift effects or "
+                "anomaly scores; use evaluate() for task-appropriate metrics.")
         return np.argmax(self.predict(dataset), axis=-1)
 
     def evaluate(self, dataset) -> "Evaluation":
         from repro.core.evaluation import evaluate_predictions
         from repro.core.dataspec import label_values
+        # task side-channels (ranking groups, uplift treatment) come out of
+        # the DATASET, not the prediction — fetch them BEFORE inference so a
+        # mis-shaped evaluation call fails fast without paying for a predict
+        extras = _evaluation_extras(self, dataset)
         y = label_values(self, dataset)
         ev = evaluate_predictions(self.task, self.predict(dataset), y,
-                                  classes=getattr(self, "classes", None))
+                                  classes=getattr(self, "classes", None),
+                                  **extras)
         # kept so Model.save can write the report beside summary.txt
         self._last_evaluation = ev
         return ev
@@ -223,6 +231,46 @@ class Model(abc.ABC):
                 "re-save the model with model.save(path).") from None
 
 
+def _side_column(dataset, name: str, *, task: str, role: str) -> np.ndarray:
+    """Fetch a task side-channel column (ranking group / uplift treatment)
+    from a VerticalDataset or a raw column mapping."""
+    from repro.core.dataspec import VerticalDataset
+    if isinstance(dataset, VerticalDataset):
+        if name in dataset.numerical or name in dataset.categorical:
+            return np.asarray(dataset.column(name))
+    else:
+        try:
+            if name in dataset:
+                return np.asarray(dataset[name], dtype=object).ravel()
+        except TypeError:
+            pass
+    raise YdfError(
+        f"{task} evaluation requires the {role} column {name!r} and the "
+        f"dataset does not carry it. Solution: pass a dataset with {name!r} "
+        "alongside the features and label.")
+
+
+def _evaluation_extras(model, dataset) -> dict:
+    """Per-task evaluation side-channels, resolved BEFORE inference."""
+    if model.task == Task.RANKING:
+        col = _side_column(dataset, getattr(model, "ranking_group", "group"),
+                           task="Ranking", role="group/query")
+        groups = np.unique(col.astype(str), return_inverse=True)[1]
+        return {"groups": groups.astype(np.int64)}
+    if model.task == Task.UPLIFT:
+        col = _side_column(dataset, getattr(model, "treatment_col", "treatment"),
+                           task="Uplift", role="treatment")
+        # two-arm normalization: smallest distinct value = control (0)
+        vals, t = np.unique(col.astype(str), return_inverse=True)
+        if len(vals) > 2:
+            raise YdfError(
+                f"Uplift evaluation supports two treatment arms, the "
+                f"treatment column has {len(vals)} distinct values: "
+                f"{list(vals[:5])}...")
+        return {"treatment": t.astype(np.int64)}
+    return {}
+
+
 # --------------------------------------------------------------------- Learner
 
 class Learner(abc.ABC):
@@ -327,3 +375,4 @@ def _ensure_builtin() -> None:
         return
     _BUILTIN = True
     from repro.core import cart, gbt, rf, baselines, metalearners  # noqa: F401
+    from repro import tasks  # noqa: F401  (uplift trees, isolation forest)

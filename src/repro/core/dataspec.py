@@ -58,7 +58,10 @@ class DataSpec:
         return self.columns[name]
 
     def feature_names(self, label: str | None = None,
-                      features: list[str] | None = None) -> list[str]:
+                      features: list[str] | None = None,
+                      exclude: list[str] | tuple[str, ...] = ()) -> list[str]:
+        """``exclude`` drops task side-channel columns (ranking group,
+        uplift treatment — DESIGN.md §12) from the default feature set."""
         if features is not None:
             missing = [f for f in features if f not in self.columns]
             if missing:
@@ -66,7 +69,8 @@ class DataSpec:
                     f"Input feature(s) {missing} not found in the dataset. "
                     f"Available columns: {sorted(self.columns)}.")
             return list(features)
-        return [c for c in self.columns if c != label]
+        drop = {label, *exclude}
+        return [c for c in self.columns if c not in drop]
 
     # show_dataspec analogue (§4.1 artefacts)
     def report(self) -> str:

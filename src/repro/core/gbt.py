@@ -38,18 +38,26 @@ class GradientBoostedTreesLearner(Learner):
         hp: GBTHparams = self.hparams
         rng = np.random.default_rng(self.seed)
         td = prepare_train_data(self, dataset, max_bins=hp.max_bins)
-        loss = make_loss(self.task, hp.loss, td.n_classes)
-        K = loss.out_dim
 
-        # §3.3: extract validation from train when early stopping needs one
+        # §3.3: extract validation from train when early stopping needs one.
+        # Ranking keeps every group WHOLE on one side of the split — a torn
+        # group corrupts both its lambda pairs and its NDCG.
+        groups_v = None
         if valid is not None:
             train_idx = np.arange(td.ds.n_rows)
-            Xv, yv, wv = _encode_eval_set(self, td, valid)
+            Xv, yv, wv, groups_v = _encode_eval_set(self, td, valid)
         elif hp.early_stopping != "NONE" and hp.validation_ratio > 0:
-            train_idx, valid_idx = extract_validation(
-                td.ds.n_rows, hp.validation_ratio, self.seed)
+            if self.task == Task.RANKING:
+                from repro.tasks.ranking import group_aware_split
+                train_idx, valid_idx = group_aware_split(
+                    td.groups, hp.validation_ratio, self.seed)
+            else:
+                train_idx, valid_idx = extract_validation(
+                    td.ds.n_rows, hp.validation_ratio, self.seed)
             Xv, yv = td.X_raw[valid_idx], td.y[valid_idx]
             wv = td.w[valid_idx]
+            if td.groups is not None:
+                groups_v = td.groups[valid_idx]
         else:
             train_idx = np.arange(td.ds.n_rows)
             Xv = yv = wv = None
@@ -57,6 +65,18 @@ class GradientBoostedTreesLearner(Learner):
         sub_td = _subset_td(td, train_idx)
         N = len(train_idx)
         y, w = sub_td.y, sub_td.w
+
+        if self.task == Task.RANKING:
+            # built here, not in make_loss: the loss owns the train/valid
+            # group layouts, which only exist after the split above
+            from repro.tasks.ranking import LambdaMARTLoss, group_layout
+            loss = LambdaMARTLoss(
+                y, group_layout(sub_td.groups), k=hp.ndcg_truncation,
+                y_valid=yv,
+                layout_valid=None if yv is None else group_layout(groups_v))
+        else:
+            loss = make_loss(self.task, hp.loss, td.n_classes)
+        K = loss.out_dim
 
         max_nodes = (hp.max_num_nodes if hp.growing_strategy == "BEST_FIRST_GLOBAL"
                      else 2 ** (hp.max_depth + 1))
@@ -194,13 +214,22 @@ class GradientBoostedTreesLearner(Learner):
                 self_eval = evaluate_predictions(self.task, act, yv,
                                                  classes=td.classes,
                                                  source="validation")
+            elif self.task == Task.RANKING:
+                self_eval = evaluate_predictions(self.task, act, yv,
+                                                 groups=groups_v,
+                                                 source="validation")
             else:
                 self_eval = evaluate_predictions(self.task, act, yv,
                                                  source="validation")
+        # a loss that holds training-set state (LambdaMART's group layouts)
+        # ships a stripped serving head instead, so pickled models stay small
+        model_loss = loss.serving_head() if hasattr(loss, "serving_head") else loss
         model = GradientBoostedTreesModel(
-            loss=loss, forest=forest, spec=td.ds.spec, features=td.features,
-            label=self.label, task=self.task, classes=td.classes,
-            self_evaluation=self_eval)
+            loss=model_loss, forest=forest, spec=td.ds.spec,
+            features=td.features, label=self.label, task=self.task,
+            classes=td.classes, self_evaluation=self_eval)
+        if self.task == Task.RANKING:
+            model.ranking_group = hp.ranking_group
         model.training_logs = {"train_loss": train_losses,
                                "valid_loss": valid_losses,
                                "num_trees": forest.n_trees // K,
@@ -226,7 +255,10 @@ def _one_tree(forest: Forest, t: int) -> Forest:
 
 def _encode_eval_set(learner, td: TrainData, valid):
     """Encode an external validation set with the TRAINING dataspec so class
-    indices and imputation match (paper §3.3 external-valid path)."""
+    indices and imputation match (paper §3.3 external-valid path). For
+    ranking the 4th return is the valid set's group ids (else None), read
+    from the RAW column — the training vocabulary must not collapse unseen
+    validation groups into one out-of-dictionary bucket."""
     from repro.core.models import _as_vertical, raw_matrix
     vds = _as_vertical(valid, td.ds.spec)
     Xv = raw_matrix(vds, td.features)
@@ -239,7 +271,21 @@ def _encode_eval_set(learner, td: TrainData, valid):
         yv = (enc - 1).astype(np.int32)
     else:
         yv = vds.numerical[learner.label].astype(np.float64)
-    return Xv, yv, np.ones(len(yv), np.float64)
+    groups_v = None
+    if learner.task == Task.RANKING:
+        from repro.core.dataspec import VerticalDataset
+        gcol = learner.hparams.ranking_group
+        if isinstance(valid, VerticalDataset):
+            col = np.asarray(valid.column(gcol))
+        else:
+            if gcol not in valid:
+                raise YdfError(
+                    f'Ranking validation set is missing the group column '
+                    f'"{gcol}".')
+            col = np.asarray(valid[gcol], dtype=object).ravel()
+        groups_v = np.unique(col.astype(str),
+                             return_inverse=True)[1].astype(np.int64)
+    return Xv, yv, np.ones(len(yv), np.float64), groups_v
 
 
 def _subset_td(td: TrainData, idx: np.ndarray) -> TrainData:
@@ -248,4 +294,5 @@ def _subset_td(td: TrainData, idx: np.ndarray) -> TrainData:
         return td
     binned = dc.replace(td.binned, codes=td.binned.codes[idx])
     return dc.replace(td, binned=binned, X_raw=td.X_raw[idx], y=td.y[idx],
-                      w=td.w[idx])
+                      w=td.w[idx],
+                      groups=None if td.groups is None else td.groups[idx])

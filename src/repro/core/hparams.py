@@ -36,6 +36,9 @@ class GBTHparams:
     loss: str = "DEFAULT"                   # DEFAULT | BINOMIAL | MULTINOMIAL | SQUARED_ERROR
     growth_engine: str = "batched"          # batched | oracle | device (§6)
     histogram_backend: str = "auto"         # auto | numpy | pallas
+    # -- ranking (task=RANKING, DESIGN.md §12.1): LambdaMART pairwise loss
+    ranking_group: str = "group"            # group/query column name
+    ndcg_truncation: int = 5                # the k in the |ΔNDCG@k| weights
 
 
 @dataclass(frozen=True)
@@ -73,6 +76,35 @@ class CartHparams:
     max_bins: int = 255
     growth_engine: str = "batched"          # batched | oracle | device (§6)
     histogram_backend: str = "auto"         # auto | numpy | pallas
+
+
+@dataclass(frozen=True)
+class UpliftHparams:
+    """Honest uplift trees (task=UPLIFT, DESIGN.md §12.2): RF-style growth
+    over the "uplift" splitter statistics — per-node treated/control outcome
+    sums scored by the Euclidean-distance gain n*(p_t - p_c)^2."""
+    num_trees: int = 100
+    max_depth: int = 8
+    min_examples: int = 20                  # per node, BOTH arms pooled
+    num_candidate_attributes: str = "SQRT"
+    bootstrap: bool = True
+    max_num_nodes: int = 4096
+    max_bins: int = 255
+    treatment: str = "treatment"            # 0/1 treatment column name
+    growth_engine: str = "batched"          # batched | oracle | device (§6)
+    histogram_backend: str = "auto"
+    tree_parallelism: int = 8
+
+
+@dataclass(frozen=True)
+class IsolationForestHparams:
+    """Isolation forest (task=ANOMALY, DESIGN.md §12.3; Liu et al. 2008).
+    Random splits, no histograms: the splitter never scans gains, so the
+    grower seam is bypassed and trees are written straight into the Forest
+    SoA, then served through the ordinary compiled engines."""
+    num_trees: int = 100
+    subsample_count: int = 256              # psi: rows sampled per tree
+    max_depth: int = 0                      # 0 = ceil(log2(subsample_count))
 
 
 # ---------------------------------------------------------------- templates

@@ -108,4 +108,9 @@ def make_loss(task: Task, loss_name: str, n_classes: int) -> Loss:
                 f"{n_classes}. Solutions: (1) check the label column, or (2) "
                 "use task=REGRESSION for numerical targets.")
         return Binomial() if n_classes == 2 else Multinomial(n_classes)
-    raise YdfError(f"GBT does not support task={task}.")
+    # RANKING is handled by gbt.py directly (repro.tasks.ranking.LambdaMARTLoss
+    # needs the group layout, which make_loss does not see)
+    raise YdfError(
+        f"GBT does not support task={task}. Supported: CLASSIFICATION, "
+        "REGRESSION, RANKING. For UPLIFT use UPLIFT_TREES, for ANOMALY use "
+        "ISOLATION_FOREST.")

@@ -40,6 +40,9 @@ class TrainData:
     classes: list[str] | None
     num_lo: np.ndarray         # per numerical feature: min (oblique min-max)
     num_hi: np.ndarray
+    # task side-channels (DESIGN.md §12): never input features
+    groups: np.ndarray | None = None     # (N,) int64 ranking group ids
+    treatment: np.ndarray | None = None  # (N,) int64 uplift arm (0=control)
 
 
 def _as_vertical(dataset, spec: DataSpec | None = None) -> VerticalDataset:
@@ -77,7 +80,38 @@ def prepare_train_data(learner, dataset, *, features: list[str] | None = None,
         raise YdfError(
             f'Label column "{label}" not found in the training dataset. '
             f"Available columns: {sorted(ds.spec.columns)}.")
-    feats = ds.spec.feature_names(label, features)
+    # task side-channel columns (ranking group / uplift treatment) are
+    # extracted here and NEVER become input features — a model that splits
+    # on its own query id or treatment assignment is leakage, not learning
+    exclude: list[str] = []
+    groups = treatment = None
+    if learner.task == Task.RANKING:
+        gcol = getattr(learner.hparams, "ranking_group", "group")
+        if gcol not in ds.spec.columns:
+            raise YdfError(
+                f'Ranking training requires the group/query column "{gcol}" '
+                f"in the dataset. Available columns: {sorted(ds.spec.columns)}. "
+                "Solution: add the column, or point ranking_group= at it.")
+        exclude.append(gcol)
+        groups = np.unique(np.asarray(ds.column(gcol)).astype(str),
+                           return_inverse=True)[1].astype(np.int64)
+    elif learner.task == Task.UPLIFT:
+        tcol = getattr(learner.hparams, "treatment", "treatment")
+        if tcol not in ds.spec.columns:
+            raise YdfError(
+                f'Uplift training requires the treatment column "{tcol}" in '
+                f"the dataset. Available columns: {sorted(ds.spec.columns)}. "
+                "Solution: add the column, or point treatment= at it.")
+        exclude.append(tcol)
+        vals, t = np.unique(np.asarray(ds.column(tcol)).astype(str),
+                            return_inverse=True)
+        if len(vals) != 2:
+            raise YdfError(
+                f'Uplift treatment column "{tcol}" must have exactly two '
+                f"distinct values (control, treated); found {len(vals)}: "
+                f"{list(vals[:5])}.")
+        treatment = t.astype(np.int64)
+    feats = ds.spec.feature_names(label, features, exclude=exclude)
     col = ds.spec[label]
     if learner.task == Task.CLASSIFICATION:
         check_classification_label(col, learner.task)
@@ -97,13 +131,22 @@ def prepare_train_data(learner, dataset, *, features: list[str] | None = None,
                 "in the training set; every training example must be labeled.")
         y = (y_enc - 1).astype(np.int32)
     else:
-        if col.semantic != Semantic.NUMERICAL:
+        task_name = learner.task.value.capitalize()
+        if col.semantic == Semantic.BOOLEAN and learner.task == Task.UPLIFT:
+            # binary outcomes are the normal uplift case; codes are 0/1
+            y = ds.column(label).astype(np.float64)
+            if (y < 0).any():
+                raise YdfError(
+                    f'{task_name} label "{label}" contains missing values.')
+        elif col.semantic != Semantic.NUMERICAL:
             raise YdfError(
-                f'Regression training requires a NUMERICAL label, but "{label}" '
+                f'{task_name} training requires a NUMERICAL label, but "{label}" '
                 f"is {col.semantic.value}. Solution: use task=CLASSIFICATION.")
-        y = ds.numerical[label].astype(np.float64)
-        if np.isnan(y).any():
-            raise YdfError(f'Regression label "{label}" contains missing values.')
+        else:
+            y = ds.numerical[label].astype(np.float64)
+            if np.isnan(y).any():
+                raise YdfError(
+                    f'{task_name} label "{label}" contains missing values.')
         classes, n_classes = None, 0
     binned = bin_features(ds, feats, max_bins=max_bins)
     X_raw = raw_matrix(ds, feats)
@@ -117,7 +160,8 @@ def prepare_train_data(learner, dataset, *, features: list[str] | None = None,
     w = np.ones(ds.n_rows, np.float64)
     return TrainData(ds=ds, features=feats, binned=binned, X_raw=X_raw, y=y,
                      w=w, n_classes=n_classes, classes=classes,
-                     num_lo=num_lo, num_hi=num_hi)
+                     num_lo=num_lo, num_hi=num_hi,
+                     groups=groups, treatment=treatment)
 
 
 def extract_validation(n: int, ratio: float, seed: int) -> tuple[np.ndarray, np.ndarray]:
@@ -267,6 +311,32 @@ class CartModel(RandomForestModel):
     pass
 
 
+class UpliftModel(DecisionForestModel):
+    """Honest uplift forest (DESIGN.md §12.2): every leaf stores the local
+    treatment effect p_t - p_c; predict() averages leaves over trees, so the
+    output is the per-example estimated uplift (positive = treat)."""
+
+    def __init__(self, *, treatment_col: str = "treatment", **kw):
+        super().__init__(**kw)
+        self.treatment_col = treatment_col
+
+    def _compile_finalize(self):
+        return _RfFinalize(False, True)   # mean over trees, scalar output
+
+
+class IsolationForestModel(DecisionForestModel):
+    """Isolation forest (DESIGN.md §12.3): leaves store the path length
+    depth + c(n); predict() maps the mean path length h through the anomaly
+    score 2^(-h / c(psi)) — near 1 for anomalies, well below 1 for inliers."""
+
+    def __init__(self, *, c_psi: float, **kw):
+        super().__init__(**kw)
+        self.c_psi = c_psi
+
+    def _compile_finalize(self):
+        return _IsolationFinalize(self.c_psi)
+
+
 # finalize heads are module-level callable classes, not lambdas, so a
 # CompiledPredictor pickles whole (engines.py §10.4); they capture the
 # fields they need, NOT the model — see _compile_finalize's cycle note
@@ -288,3 +358,13 @@ class _RfFinalize:
     def __call__(self, per_tree: np.ndarray) -> np.ndarray:
         out = aggregate_rf(per_tree, self.wta)
         return out[:, 0] if self.regression else out
+
+
+@dataclass
+class _IsolationFinalize:
+    c_psi: float
+
+    def __call__(self, per_tree: np.ndarray) -> np.ndarray:
+        # per_tree: (N, T, 1) path lengths; Liu et al. 2008 eq. 2
+        h = np.asarray(per_tree)[..., 0].mean(axis=1)
+        return np.power(2.0, -h / max(self.c_psi, 1e-12))

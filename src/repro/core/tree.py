@@ -256,7 +256,10 @@ def eval_node_conditions(forest: Forest, X: np.ndarray, t: np.ndarray,
     go = x >= forest.threshold[t, node]
     # categorical: bit test on the node's category mask
     cat = forest.cat_mask[t, node]                    # (N, T, MASK_WORDS)
-    code = np.clip(x.astype(np.int64), 0, MASK_WORDS * 32 - 1)
+    # numpy float->int semantics ARE the documented garbage domain (§10.2):
+    # NaN/±inf/|x|>=2^63 cast to INT64_MIN, then clip to code 0
+    with np.errstate(invalid="ignore"):
+        code = np.clip(x.astype(np.int64), 0, MASK_WORDS * 32 - 1)
     word = np.take_along_axis(cat, (code // 32)[..., None], axis=-1)[..., 0]
     bit = (word >> (code % 32).astype(np.uint32)) & 1
     go = np.where(cat.any(axis=-1), bit.astype(bool), go)
@@ -301,8 +304,13 @@ def predict_naive(forest: Forest, X: np.ndarray) -> np.ndarray:
                                         X[n, forest.obl_features[t, node]]))
                     go = proj >= forest.threshold[t, node]
                 elif forest.cat_mask[t, node].any():
-                    code = int(X[n, f])
-                    code = min(max(code, 0), MASK_WORDS * 32 - 1)
+                    # same float->int semantics as the vectorized engines
+                    # (PR 7 divergence: python int() overflowed to 255 /
+                    # raised on NaN where numpy casts to INT64_MIN -> 0)
+                    with np.errstate(invalid="ignore"):
+                        code = int(np.clip(
+                            np.float32(X[n, f]).astype(np.int64),
+                            0, MASK_WORDS * 32 - 1))
                     go = bool((forest.cat_mask[t, node, code // 32] >> (code % 32)) & 1)
                 else:
                     go = X[n, f] >= forest.threshold[t, node]

@@ -52,6 +52,7 @@ import os
 import pickle
 import signal
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -76,14 +77,26 @@ class CheckpointPolicy:
     boundary; returning True stops training AFTER the current tree, saves a
     final checkpoint and finalizes a servable truncated model. SIGINT /
     SIGTERM are captured to the same effect while a session is active.
+
+    ``every_seconds`` adds a wall-clock cadence ON TOP of the tree cadence:
+    a save becomes due when EITHER ``every_n_trees`` trees have grown since
+    the last checkpoint OR ``every_seconds`` have elapsed — but it still
+    only fires at the same tree/block boundaries the training loop already
+    drives, never mid-tree. ``clock`` is the injectable time source
+    (monotonic seconds; tests substitute a FakeClock) and is deliberately
+    NOT part of the manifest.
     """
     directory: str
     every_n_trees: int = 10
+    every_seconds: float | None = None
     keep_last: int = 2
     cancel: Callable[[], bool] | None = None
+    clock: Callable[[], float] = time.monotonic
 
     def to_manifest(self) -> dict:
         return {"every_n_trees": int(self.every_n_trees),
+                "every_seconds": (None if self.every_seconds is None
+                                  else float(self.every_seconds)),
                 "keep_last": int(self.keep_last)}
 
 
@@ -165,7 +178,8 @@ def write_checkpoint(directory: str, trees_done: int, payload: dict, *,
         "data_fingerprint": fingerprint,
         "files": {_STATE_FILE: _sha1(state_path)},
         "policy": (policy.to_manifest() if policy is not None
-                   else {"every_n_trees": 10, "keep_last": keep_last}),
+                   else {"every_n_trees": 10, "every_seconds": None,
+                         "keep_last": keep_last}),
     }
     mpath = os.path.join(tmp, _MANIFEST_FILE)
     with open(mpath, "w") as f:
@@ -307,6 +321,9 @@ class CheckpointSession:
         self.fingerprint = fingerprint
         self.events: list[dict] = []
         self.last_saved = 0
+        # wall-clock cadence baseline: session open counts as "last save"
+        # so a slow first tree cannot trigger an instant checkpoint storm
+        self._last_save_time = policy.clock()
         self._interrupted = False
         self._prev_handlers: dict[int, Any] = {}
 
@@ -405,17 +422,26 @@ class CheckpointSession:
 
     def save(self, trees_done: int, payload: dict, *, done: bool = False,
              force: bool = False) -> bool:
-        """Checkpoint iff the cadence (``every_n_trees``) is due or forced.
-        Returns True when a checkpoint was written."""
-        if not force and trees_done - self.last_saved < self.policy.every_n_trees:
-            return False
+        """Checkpoint iff a cadence is due or forced: ``every_n_trees``
+        trees since the last save, OR ``every_seconds`` of wall clock
+        (policy.clock) since the last save. Returns True when a checkpoint
+        was written. Called at tree/block boundaries only, so the wall-clock
+        cadence can never tear a tree."""
         if trees_done <= 0:
+            return False
+        due_trees = (trees_done - self.last_saved
+                     >= self.policy.every_n_trees)
+        es = self.policy.every_seconds
+        due_time = (es is not None
+                    and self.policy.clock() - self._last_save_time >= es)
+        if not (force or due_trees or due_time):
             return False
         write_checkpoint(self.policy.directory, trees_done, payload,
                          config=self.config, fingerprint=self.fingerprint,
                          done=done, policy=self.policy,
                          keep_last=self.policy.keep_last)
         self.last_saved = trees_done
+        self._last_save_time = self.policy.clock()
         self.events.append({"event": "checkpoint", "trees_done": trees_done,
                             "done": done})
         return True
@@ -458,5 +484,6 @@ def resume_training(directory: str, dataset, valid=None):
     pol = manifest.get("policy", {})
     policy = CheckpointPolicy(directory,
                               every_n_trees=pol.get("every_n_trees", 10),
+                              every_seconds=pol.get("every_seconds"),
                               keep_last=pol.get("keep_last", 2))
     return learner.train(dataset, valid, checkpoint=policy)

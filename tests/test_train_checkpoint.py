@@ -22,6 +22,7 @@ from repro.core.cart import CartLearner
 from repro.data.tabular import adult_like
 from repro.train.checkpoint import (
     CheckpointPolicy,
+    CheckpointSession,
     checkpoint_name,
     latest_checkpoint,
     resume_training,
@@ -174,6 +175,98 @@ def test_resume_of_finished_run_returns_same_model(tmp_path):
     assert manifest["done"]
     again = resume_training(ckdir, ds)     # grows nothing, rebuilds the model
     assert_forests_bit_identical(first.forest, again.forest)
+
+
+# ------------------------------------------------------------ wall clock
+
+class FakeClock:
+    """Injectable monotonic clock: time advances only when told to."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def advance(self, seconds):
+        self.t += seconds
+
+    def __call__(self):
+        return self.t
+
+
+def test_wall_clock_cadence_fires_at_boundaries(tmp_path):
+    """every_seconds makes a save due by elapsed wall clock even when the
+    tree cadence is far away; the timer resets AT the save, and nothing
+    fires between boundaries (save() is only ever called at them)."""
+    clk = FakeClock()
+    pol = CheckpointPolicy(str(tmp_path / "ck"), every_n_trees=10**9,
+                           every_seconds=5.0, clock=clk)
+    sess = CheckpointSession(pol, config={"learner": "X"}, fingerprint="f")
+    payload = {"trees": np.arange(3)}
+    assert not sess.save(1, payload)          # 0.0s elapsed
+    clk.advance(4.9)
+    assert not sess.save(2, payload)          # 4.9s < 5.0s
+    clk.advance(0.2)
+    assert sess.save(3, payload)              # 5.1s since session open
+    assert not sess.save(4, payload)          # timer reset by the save
+    clk.advance(5.0)
+    assert sess.save(5, payload)
+    names = sorted(n for n in os.listdir(pol.directory) if "." not in n)
+    assert names == [checkpoint_name(3), checkpoint_name(5)]
+
+
+def test_wall_clock_and_tree_cadence_compose(tmp_path):
+    """Either cadence being due triggers the save: trees without elapsed
+    time, and elapsed time without trees."""
+    clk = FakeClock()
+    pol = CheckpointPolicy(str(tmp_path / "ck"), every_n_trees=3,
+                           every_seconds=100.0, keep_last=10, clock=clk)
+    sess = CheckpointSession(pol, config={"learner": "X"}, fingerprint="f")
+    assert not sess.save(2, {})               # neither cadence due
+    assert sess.save(3, {})                   # tree cadence
+    clk.advance(100.0)
+    assert sess.save(4, {})                   # wall clock, only 1 tree later
+    assert not sess.save(5, {})
+
+
+def test_wall_clock_policy_round_trips_through_manifest(tmp_path):
+    """every_seconds survives the manifest so resume_training continues
+    under the same wall-clock cadence — and the resumed run is still
+    bit-identical to a clean one."""
+    ds = _cls_data()
+    clean = _learner("gbt", Task.CLASSIFICATION, "batched").train(ds)
+    ckdir = str(tmp_path / "ck")
+    policy = CheckpointPolicy(ckdir, every_n_trees=2, every_seconds=900.0,
+                              cancel=_cancel_after(2))
+    part = _learner("gbt", Task.CLASSIFICATION, "batched").train(
+        ds, checkpoint=policy)
+    assert part.training_logs["interrupted"]
+    _, manifest, _ = latest_checkpoint(ckdir)
+    assert manifest["policy"]["every_seconds"] == 900.0
+    resumed = resume_training(ckdir, ds)
+    assert_forests_bit_identical(clean.forest, resumed.forest)
+
+
+def test_wall_clock_only_cadence_checkpoints_during_training(tmp_path):
+    """Integration: tree cadence effectively off, FakeClock advanced via
+    the cancel probe (polled at every boundary) — intermediate checkpoints
+    appear purely from elapsed wall clock."""
+    ds = _cls_data()
+    clk = FakeClock()
+
+    def tick():                                # one boundary ~= 0.6s
+        clk.advance(0.6)
+        return False
+
+    ckdir = str(tmp_path / "ck")
+    policy = CheckpointPolicy(ckdir, every_n_trees=10**9, every_seconds=1.0,
+                              keep_last=10, cancel=tick, clock=clk)
+    model = _learner("gbt", Task.CLASSIFICATION, "batched").train(
+        ds, checkpoint=policy)
+    saves = [e for e in model.training_logs["resilience"]
+             if e["event"] == "checkpoint"]
+    # 6 trees x 0.6s/boundary with a 1s cadence: interior saves happened
+    # before the forced final one
+    assert len(saves) >= 2
+    assert any(not e["done"] for e in saves)
 
 
 # ------------------------------------------------------------ store hardening

@@ -62,7 +62,12 @@ def _oracle_per_tree(forest, X):
                 if isinstance(c, NumericalHigherThan):
                     go = bool(x[c.feature] >= np.float32(c.threshold))
                 elif isinstance(c, CategoricalIsIn):
-                    code = min(max(int(x[c.feature]), 0), 255)
+                    # numpy float->int semantics for garbage values (§10.2):
+                    # NaN / +-inf / |x| >= 2^63 cast to INT64_MIN, THEN clip
+                    # — so +inf lands on code 0, not 255
+                    with np.errstate(invalid="ignore"):
+                        code = int(np.clip(
+                            np.float32(x[c.feature]).astype(np.int64), 0, 255))
                     go = code in c.categories
                 else:  # pragma: no cover - zoo forests are axis-aligned
                     raise AssertionError(f"unexpected condition {c}")
@@ -101,8 +106,9 @@ def _assert_strategies_bit_identical(forest, X, oracle=True):
 
 def _inputs_for(forest, n, seed=5, cat_feats=(), n_cats=300):
     """Serving inputs including the hostile numerics: NaN / +-inf / huge on
-    NUMERICAL columns (categorical columns stay integer codes — the naive
-    oracle's ``int(x)`` is the documented domain)."""
+    numerical AND categorical columns — every strategy and the oracle share
+    numpy's float->int cast-then-clip semantics for garbage codes (§10.2),
+    so hostile categorical values are part of the bit-identity contract."""
     rng = np.random.default_rng(seed)
     F = len(forest.feature_names)
     X = (rng.normal(size=(n, F)) * 2).astype(np.float32)
@@ -114,6 +120,11 @@ def _inputs_for(forest, n, seed=5, cat_feats=(), n_cats=300):
         X[1, num[0]] = np.inf
         X[2, num[0]] = -np.inf
         X[3, num[0]] = 3e38
+    if cat_feats and n >= 8:
+        X[4, cat_feats[0]] = np.nan
+        X[5, cat_feats[0]] = np.inf
+        X[6, cat_feats[0]] = -np.inf
+        X[7, cat_feats[0]] = 3e38      # >= 2^63: cast-then-clip, not clip-255
     return X
 
 
@@ -178,6 +189,36 @@ def test_trained_model_matrix_bit_identical(tiny_adult):
     for name, model in _trained_models(tiny_adult):
         pred = compile_predictor(model, "naive")
         X = pred.encode(tiny_adult)[:80]
+        _assert_strategies_bit_identical(model.forest, X)
+        base = compile_predictor(model, "vectorized").predict_encoded(X)
+        for engine in ("bucketed", "naive"):
+            got = compile_predictor(model, engine).predict_encoded(X)
+            assert np.array_equal(np.asarray(got), np.asarray(base)), \
+                (name, engine)
+
+
+def test_task_model_matrix_bit_identical():
+    """Ranking/uplift/anomaly models (DESIGN.md §12) serve bit-identically:
+    every traversal strategy bit-equals the typed-tree oracle, and the full
+    predict head agrees across compiled engines."""
+    from repro.data.tabular import grouped_relevance, planted_anomaly, \
+        randomized_treatment
+    from repro.tasks import IsolationForestLearner, UpliftTreesLearner
+    ds_r = grouped_relevance(n_groups=30, seed=7)
+    ds_u = randomized_treatment(n=400, seed=11)
+    ds_a = planted_anomaly(n_inlier=150, n_anomaly=8, seed=13)
+    models = [
+        ("ranking", GradientBoostedTreesLearner(
+            label="rel", task=Task.RANKING, num_trees=6,
+            seed=1).train(ds_r), ds_r),
+        ("uplift", UpliftTreesLearner(
+            label="outcome", num_trees=4, seed=2).train(ds_u), ds_u),
+        ("anomaly", IsolationForestLearner(
+            label="anomaly", num_trees=6, seed=3).train(ds_a), ds_a),
+    ]
+    for name, model, data in models:
+        pred = compile_predictor(model, "naive")
+        X = pred.encode(data)[:80]
         _assert_strategies_bit_identical(model.forest, X)
         base = compile_predictor(model, "vectorized").predict_encoded(X)
         for engine in ("bucketed", "naive"):
