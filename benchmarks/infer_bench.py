@@ -149,9 +149,33 @@ def run(rows: int = 100_000, num_trees: int = 30, reps: int = 3,
                              n_trees=sklearn_trees)
     if sk is not None:
         out["configs"]["sklearn_import"] = sk
+    out["profile"] = _profile_section(models[0][1], serve, verbose)
     out["headline_speedup"] = max(
         a["speedup"] for a in out["configs"]["gbt_adult"]["after"].values())
     return out
+
+
+def _profile_section(model, serve, verbose: bool) -> dict:
+    """Phase breakdown of traced inference (DESIGN.md §13.6): compile vs
+    dispatch time for the auto-selected engine, recorded in the BENCH
+    trajectory alongside the headline ratios."""
+    from repro.core.engines import compile_predictor
+    from repro.obs import trace
+    from repro.obs.export import profile_dict
+
+    with trace.capture() as tracer:
+        pred = compile_predictor(model)
+        for _ in range(3):
+            pred.predict(serve)
+    prof = profile_dict(tracer)
+    prof["engine"] = pred.name
+    if verbose:
+        top = sorted(prof["phases"].items(),
+                     key=lambda kv: -kv[1]["total_s"])[:4]
+        print("  profile (traced gbt_adult): " + ", ".join(
+            f"{n} {d['total_s'] * 1e3:.0f}ms x{d['count']}"
+            for n, d in top), flush=True)
+    return prof
 
 
 def _run_sklearn_import(rows: int, reps: int, verbose: bool,

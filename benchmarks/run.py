@@ -1,6 +1,10 @@
 """Benchmark entry point: one module per paper table/figure.
 
   python -m benchmarks.run [--skip accuracy speed ...]
+  python -m benchmarks.run --profile   # traced phase breakdowns only:
+                                       # re-runs the train/infer headline
+                                       # configs with tracing on and writes
+                                       # BENCH_profile.json (DESIGN.md §13)
 
   accuracy_rank   — Fig. 6 mean ranks + Tab. 3 pairwise wins
   speed           — Tab. 2 train/inference seconds
@@ -26,10 +30,41 @@ import argparse
 import time
 
 
+def run_profile(out_path: str = "BENCH_profile.json") -> dict:
+    """The --profile sub-mode: the train/infer headline configs re-run
+    under the tracer, phase breakdowns written next to the BENCH files."""
+    import json
+
+    from benchmarks import infer_bench, train_bench
+    from repro.core import GradientBoostedTreesLearner
+    from repro.data.tabular import adult_like, train_test_split
+
+    out = {"benchmark": "profile"}
+    print("== traced training phases (DESIGN.md §13.6) ==", flush=True)
+    out["train"] = train_bench._profile_section(9, verbose=True)
+    print("== traced inference phases (DESIGN.md §13.6) ==", flush=True)
+    train, _ = train_test_split(adult_like(2000), 0.3, 1)
+    model = GradientBoostedTreesLearner(
+        label="income", num_trees=10).train(train)
+    serve = adult_like(20_000, seed=7)
+    serve.pop("income")
+    out["infer"] = infer_bench._profile_section(model, serve, verbose=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {out_path}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--skip", nargs="*", default=[])
+    ap.add_argument("--profile", action="store_true",
+                    help="only the traced phase-breakdown sub-mode "
+                         "(writes BENCH_profile.json)")
     args = ap.parse_args()
+    if args.profile:
+        run_profile()
+        return
 
     from benchmarks import accuracy_rank, analyze_bench, distributed_df, \
         engines_bench, infer_bench, rank_bench, serve_bench, speed, \

@@ -180,11 +180,37 @@ def run(num_trees: int = 30, scaled_rows: int = 100_000, reps_cap: int = 99,
     out["checkpoint_overhead"] = _checkpoint_overhead(
         num_trees, reps_cap, verbose)
 
+    out["profile"] = _profile_section(num_trees, verbose)
+
     out["headline_speedup"] = out["configs"]["gbt_default_scaled"][
         "after"]["numpy"]["speedup"]
     out["rf_headline_speedup"] = out["configs"]["rf_parallel_scaled"][
         "after"]["numpy"]["speedup"]
     return out
+
+
+def _profile_section(num_trees: int, verbose: bool) -> dict:
+    """Phase breakdown of one traced small-config GBT train (DESIGN.md
+    §13.6): the BENCH trajectory records where training time GOES — per
+    grower phase — not just the headline ratio."""
+    from repro.obs import trace
+    from repro.obs.export import profile_dict
+
+    small = SUITE[2]
+    train, _ = train_test_split(make_dataset(small), 0.3, small.seed)
+    with trace.capture() as tracer:
+        GradientBoostedTreesLearner(
+            label="label", num_trees=num_trees).train(train)
+    prof = profile_dict(tracer)
+    prof["dataset"] = small.name
+    prof["num_trees"] = num_trees
+    if verbose:
+        top = sorted(prof["phases"].items(),
+                     key=lambda kv: -kv[1]["total_s"])[:5]
+        print("  profile (traced small GBT): " + ", ".join(
+            f"{n} {d['total_s'] * 1e3:.0f}ms x{d['count']}"
+            for n, d in top), flush=True)
+    return prof
 
 
 def _checkpoint_overhead(num_trees: int, reps_cap: int, verbose: bool) -> dict:

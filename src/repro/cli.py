@@ -15,6 +15,10 @@
         [--deadline-ms=50] [--request-rows=32] [--engines=vectorized,naive] \
         [--output=csv:predictions.csv] [--json]
   python -m repro.cli benchmark_inference --dataset=csv:test.csv --model=/tmp/model
+  python -m repro.cli profile train --dataset=csv:train.csv --label=income \
+        --trace=trace.json [--learner=...] [--hparam k=v]
+  python -m repro.cli profile infer --dataset=csv:test.csv --model=/tmp/model \
+        --trace=trace.json
 
 Training configurations are cross-API compatible (§3.10): a model trained
 here loads from Python and vice versa.
@@ -54,6 +58,22 @@ def cmd_show_dataspec(args):
     print(_load_spec(args.dataspec).report())
 
 
+def _parse_hparams(pairs):
+    hparams = {}
+    for kv in pairs:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                pass
+        if v in ("true", "false", "True", "False"):
+            v = str(v).lower() == "true"
+        hparams[k] = v
+    return hparams
+
+
 def cmd_train(args):
     from repro.core import Task, get_learner
     from repro.data.io import read_dataset
@@ -70,18 +90,7 @@ def cmd_train(args):
         for ev in (logs or {}).get("resilience", []):
             print(f"  resilience: {ev}")
         return
-    hparams = {}
-    for kv in args.hparam:
-        k, v = kv.split("=", 1)
-        for cast in (int, float):
-            try:
-                v = cast(v)
-                break
-            except ValueError:
-                pass
-        if v in ("true", "false", "True", "False"):
-            v = str(v).lower() == "true"
-        hparams[k] = v
+    hparams = _parse_hparams(args.hparam)
     task = Task(args.task.upper())
     learner_name = args.learner
     if args.learner == "GRADIENT_BOOSTED_TREES":
@@ -240,6 +249,50 @@ def cmd_benchmark_inference(args):
                               repetitions=args.repetitions))
 
 
+def cmd_profile(args):
+    """Per-phase profiling (DESIGN.md §13): run one training or one
+    inference pass under the tracer, write a Chrome trace-event file
+    (loadable in chrome://tracing / ui.perfetto.dev) and print the phase
+    summary — where the time went, phase by phase, subsystem by
+    subsystem. No flags change what runs; profiling observes, it does
+    not steer."""
+    from repro.data.io import read_dataset
+    from repro.obs import trace
+    from repro.obs.export import (phase_summary, profile_dict,
+                                  write_chrome_trace)
+    data = read_dataset(args.dataset)
+    if args.what == "train":
+        from repro.core import Task, get_learner
+        cls = get_learner(args.learner)
+        learner = cls(label=args.label, task=Task(args.task.upper()),
+                      seed=args.seed, **_parse_hparams(args.hparam))
+        with trace.capture() as tracer:
+            model = learner.train(data)
+        if args.output:
+            model.save(args.output)
+            print(f"model written to {args.output}")
+    else:
+        from repro.core import Model
+        model = Model.load(args.model)
+        data.pop(model.label, None)
+        with trace.capture() as tracer:
+            for _ in range(max(1, args.repetitions)):
+                model.predict(data)
+    write_chrome_trace(args.trace, tracer)
+    print(f"chrome trace ({tracer.span_count()} spans, "
+          f"{len(tracer.events)} events) written to {args.trace}")
+    if args.json:
+        print(json.dumps(profile_dict(tracer), indent=1))
+        return
+    rows = sorted(phase_summary(tracer).items(),
+                  key=lambda kv: -kv[1]["self_s"])
+    print(f"{'phase':<32} {'count':>7} {'total_ms':>10} "
+          f"{'self_ms':>10} {'mean_ms':>9}")
+    for name, d in rows:
+        print(f"{name:<32} {d['count']:>7} {d['total_s'] * 1e3:>10.2f} "
+              f"{d['self_s'] * 1e3:>10.2f} {d['mean_s'] * 1e3:>9.3f}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(prog="repro.cli", description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -340,6 +393,28 @@ def main(argv=None):
     p.add_argument("--model", required=True)
     p.add_argument("--repetitions", type=int, default=3)
     p.set_defaults(fn=cmd_benchmark_inference)
+
+    p = sub.add_parser("profile",
+                       help="trace one train/infer pass (DESIGN.md §13)")
+    p.add_argument("what", choices=("train", "infer"))
+    p.add_argument("--dataset", required=True)
+    p.add_argument("--trace", default="profile_trace.json",
+                   help="Chrome trace-event output path "
+                        "(chrome://tracing / ui.perfetto.dev)")
+    p.add_argument("--json", action="store_true",
+                   help="dump the phase breakdown as JSON instead of a table")
+    # train mode
+    p.add_argument("--label", help="label column (train mode)")
+    p.add_argument("--task", default="CLASSIFICATION")
+    p.add_argument("--learner", default="GRADIENT_BOOSTED_TREES")
+    p.add_argument("--seed", type=int, default=1234)
+    p.add_argument("--hparam", action="append", default=[])
+    p.add_argument("--output", help="also save the trained model here")
+    # infer mode
+    p.add_argument("--model", help="model directory (infer mode)")
+    p.add_argument("--repetitions", type=int, default=1,
+                   help="predict passes to trace (infer mode)")
+    p.set_defaults(fn=cmd_profile)
 
     args = ap.parse_args(argv)
     args.fn(args)

@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import build_training_logs, trace
 from repro.core.api import Learner, Task, register_learner
 from repro.core.grower import GrowthParams, grow_tree
 from repro.core.hparams import CartHparams
@@ -78,15 +79,18 @@ class CartLearner(Learner):
             if not grown:
                 w = np.zeros(N)
                 w[tr_idx] = 1.0
-                grow_tree(forest, 0, td.binned, td.X_raw, base * w[:, None],
-                          w > 0, leaf_fn, gp, rng)
+                with trace.span("cart/grow"):
+                    grow_tree(forest, 0, td.binned, td.X_raw,
+                              base * w[:, None], w > 0, leaf_fn, gp, rng)
                 if sess is not None and sess.should_stop():
                     # servable unpruned tree now; pruning happens on resume
                     interrupted = True
                     sess.save(1, _payload(False), done=False, force=True)
             if not pruned and not interrupted:
                 if len(va_idx):
-                    _prune(forest, td.X_raw[va_idx], td.y[va_idx], self.task)
+                    with trace.span("cart/prune", valid_rows=len(va_idx)):
+                        _prune(forest, td.X_raw[va_idx], td.y[va_idx],
+                               self.task)
                 pruned = True
                 if sess is not None:
                     sess.save(1, _payload(True), done=True, force=True)
@@ -94,9 +98,11 @@ class CartLearner(Learner):
         model = CartModel(winner_take_all=False, forest=forest, spec=td.ds.spec,
                           features=td.features, label=self.label, task=self.task,
                           classes=td.classes)
-        if sess is not None:
-            model.training_logs = {"resilience": sess.events,
-                                   "interrupted": interrupted}
+        model.training_logs = build_training_logs(
+            learner="cart", num_trees=1,
+            growth_engine=hp.growth_engine, engine_fallback=None,
+            resilience=sess.events if sess is not None else None,
+            interrupted=interrupted)
         return model
 
 

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.obs import build_training_logs, trace, validate_training_logs
 from repro.core.tree import Forest, empty_forest
 
 
@@ -324,8 +325,9 @@ class DistributedGBT:
                 stats_d = jax.device_put(jnp.asarray(stats),
                                          NamedSharding(self.mesh, P(cfg.data_axis, None)))
                 node0 = jax.device_put(jnp.zeros(N, jnp.int32), rep)
-                feat, bin_, gain, leaf_stats, node_of = grow_tree_complete(
-                    fns, codes_d, stats_d, node0, cfg)
+                with trace.span("distributed/tree", tree=it):
+                    feat, bin_, gain, leaf_stats, node_of = grow_tree_complete(
+                        fns, codes_d, stats_d, node0, cfg)
                 leaf = -cfg.shrinkage * leaf_stats[:, 0] / (leaf_stats[:, 1]
                                                             + cfg.l2 + 1e-12)
                 tree = {"feat": feat, "bin": bin_, "gain": gain,
@@ -344,9 +346,10 @@ class DistributedGBT:
                               done=done, force=done or interrupted)
                     if interrupted:
                         break
-        self.training_logs = {
-            "resilience": sess.events if sess is not None else [],
-            "interrupted": interrupted}
+        self.training_logs = build_training_logs(
+            learner="distributed_gbt", num_trees=len(self.trees),
+            resilience=sess.events if sess is not None else None,
+            interrupted=interrupted)
         return self
 
     def predict_scores(self, codes: np.ndarray) -> np.ndarray:
@@ -459,7 +462,13 @@ class SimulatedCluster:
         self.trees: list[dict] = []
         self.init_pred = 0.0
         self.resilience: list[dict] = []
-        self.training_logs: dict = {"resilience": self.resilience}
+        # pre-fit logs hold a LIVE reference to the resilience list so
+        # direct grow_tree() users see deaths as they happen; fit() rebuilds
+        # the dict through the same §13.4 schema with final values
+        self.training_logs: dict = validate_training_logs({
+            "schema_version": 1, "learner": "simulated_cluster",
+            "num_trees": 0, "growth_engine": None, "engine_fallback": None,
+            "resilience": self.resilience, "interrupted": False})
         self._tree_counter = 0
 
     def kill_worker(self, wid: int, *, tree: int | None = None,
@@ -479,6 +488,8 @@ class SimulatedCluster:
             {"event": "worker_death", "worker": wid, "tree": tree,
              "level": level, "features_reassigned": n_feats,
              "workers_alive": len(alive)})
+        trace.event("distributed/worker_death", worker=wid, tree=tree,
+                    level=level, features_reassigned=n_feats)
 
     def _train_config(self, task: str) -> dict:
         import dataclasses as dc
@@ -494,9 +505,19 @@ class SimulatedCluster:
         feats, bins, gains = [], [], []
         for d in range(cfg.max_depth):
             n_nodes = 2 ** d
+            level_ctx = trace.span("distributed/level", tree=t, level=d,
+                                   nodes=n_nodes)
+            level_ctx.__enter__()
             while True:
-                cands = [w.local_best(stats, node_of, n_nodes, cfg)
-                         for w in self.workers if w.alive]
+                cands = []
+                for w in self.workers:
+                    if not w.alive:
+                        continue
+                    with trace.span("distributed/worker_best", worker=w.wid,
+                                    tree=t, level=d,
+                                    features=len(w.feature_ids)):
+                        cands.append(w.local_best(stats, node_of, n_nodes,
+                                                  cfg))
                 self.traffic_bytes += sum(len(c) for c in cands) * 12  # 3 scalars
                 dead = self.fault_plan.deaths_at(
                     t, d, [w.wid for w in self.workers if w.alive])
@@ -512,6 +533,8 @@ class SimulatedCluster:
                 self.resilience.append(
                     {"event": "level_restart", "tree": t, "level": d,
                      "deaths": list(dead)})
+                trace.event("distributed/level_restart", tree=t, level=d,
+                            deaths=len(dead))
             for i in range(n_nodes):
                 # assignment-independent merge: gain desc, feature id asc,
                 # bin asc — a worker death can never change the winner
@@ -531,6 +554,7 @@ class SimulatedCluster:
                     go[sel] = owner.partition(f, b)[sel]
             self.traffic_bytes += (N + 7) // 8  # bit-packed partition
             node_of = node_of * 2 + go
+            level_ctx.__exit__(None, None, None)
         # leaves
         leaf = np.zeros(2 ** cfg.max_depth, np.float32)
         for i in range(2 ** cfg.max_depth):
@@ -581,9 +605,11 @@ class SimulatedCluster:
                               done=done, force=done or interrupted)
                     if interrupted:
                         break
-        self.training_logs = {"resilience": self.resilience,
-                              "checkpoint": sess.events if sess is not None else [],
-                              "interrupted": interrupted}
+        self.training_logs = build_training_logs(
+            learner="simulated_cluster", num_trees=len(self.trees),
+            resilience=self.resilience, interrupted=interrupted,
+            extra={"checkpoint":
+                   sess.events if sess is not None else []})
         return self
 
     def predict_scores(self, codes: np.ndarray) -> np.ndarray:

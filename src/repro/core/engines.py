@@ -41,12 +41,12 @@ round-tripped predictor keeps its engine choice without shipping closures.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Callable
 
 import numpy as np
 
+from repro.obs import clock, trace
 from repro.core.api import EngineFailure, YdfError
 from repro.core.dataspec import BatchEncoder
 from repro.core.tree import (
@@ -234,7 +234,9 @@ class CompiledPredictor:
         # front-end routes EngineFailure into retry / circuit-breaker logic,
         # while schema errors (encode) stay YdfError and reach the caller
         try:
-            return self.engine.per_tree(X)
+            with trace.span("engines/dispatch", engine=self.name,
+                            rows=len(X)):
+                return self.engine.per_tree(X)
         except (EngineFailure, KeyboardInterrupt):
             raise
         except Exception as e:
@@ -256,8 +258,9 @@ def compile_predictor(model, engine: str | None = None) -> CompiledPredictor:
     """Compile ``model`` into a CompiledPredictor. Jit'd engines retrace per
     batch shape, so shape warmup belongs to the layer that knows the
     dispatch sizes — serving/forest.py warms at its padding buckets."""
-    t0 = time.perf_counter()
-    eng = compile_model(model, engine)
+    t0 = clock.perf()
+    with trace.span("engines/compile", engine=engine or "auto"):
+        eng = compile_model(model, engine)
     encoder = BatchEncoder(model.spec, model.features)
     # _compile_finalize returns a picklable callable over the needed fields
     # only — a bound model method would cycle Model <-> predictor (models.py)
@@ -269,7 +272,7 @@ def compile_predictor(model, engine: str | None = None) -> CompiledPredictor:
         np.float32))
     return CompiledPredictor(engine=eng, encoder=encoder,
                              finalize=finalize,
-                             compile_s=time.perf_counter() - t0,
+                             compile_s=clock.perf() - t0,
                              out_shape=tuple(np.asarray(probe).shape[1:]))
 
 
@@ -291,18 +294,18 @@ def benchmark_inference(model, dataset, *, repetitions: int = 5) -> str:
     lines = ["benchmark_inference (avg over %d reps, batch=%d):"
              % (repetitions, X.shape[0])]
     for name in available_engines(model.forest):
-        t0 = time.perf_counter()
+        t0 = clock.perf()
         eng = compile_model(model, name)
         if name in JIT_ENGINES:
             eng.per_tree(X)          # warmup / trace at the timed shape
-            compile_s = time.perf_counter() - t0
+            compile_s = clock.perf() - t0
         else:
-            compile_s = time.perf_counter() - t0
+            compile_s = clock.perf() - t0
             eng.per_tree(X[:min(64, len(X))])  # untimed code-path touch
-        t0 = time.perf_counter()
+        t0 = clock.perf()
         for _ in range(repetitions):
             eng.per_tree(X)
-        dt = (time.perf_counter() - t0) / repetitions
+        dt = (clock.perf() - t0) / repetitions
         us = dt / max(1, X.shape[0]) * 1e6
         lines.append(f"  {name:<12s} {us:10.3f} us/example  "
                      f"({dt * 1e3:.2f} ms/batch, compile {compile_s * 1e3:.1f} ms)")

@@ -9,6 +9,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import build_training_logs, trace
 from repro.core.api import Learner, Task, YdfError, register_learner
 from repro.core.grower import GrowthParams, grow_tree
 from repro.core.hparams import GBTHparams
@@ -161,7 +162,8 @@ class GradientBoostedTreesLearner(Learner):
             for it in range(trees_done, hp.num_trees):
                 if stopped:
                     break
-                g, h = loss.grad_hess(pred, y, w)
+                with trace.span("gbt/grad_hess", iteration=it):
+                    g, h = loss.grad_hess(pred, y, w)
                 bag = w if hp.subsample >= 1.0 else w * (rng.random(N) < hp.subsample)
                 for k in range(K):
                     t = it * K + k
@@ -171,9 +173,11 @@ class GradientBoostedTreesLearner(Learner):
                         h[:, k] * bag,
                         bag,
                     ], axis=1).astype(np.float64)
-                    node_of = grow_tree(forest, t, sub_td.binned, sub_td.X_raw,
-                                        stats, bag > 0, leaf_fn, gp, rng,
-                                        sub_td.num_lo, sub_td.num_hi)
+                    with trace.span("gbt/tree", tree=t, iteration=it):
+                        node_of = grow_tree(forest, t, sub_td.binned,
+                                            sub_td.X_raw, stats, bag > 0,
+                                            leaf_fn, gp, rng,
+                                            sub_td.num_lo, sub_td.num_hi)
                     vals = forest.leaf_value[t, np.maximum(node_of, 0), 0]
                     upd = np.where(node_of >= 0, vals, 0.0)
                     if hp.subsample < 1.0:  # OOB examples still move (predict path)
@@ -230,14 +234,12 @@ class GradientBoostedTreesLearner(Learner):
             classes=td.classes, self_evaluation=self_eval)
         if self.task == Task.RANKING:
             model.ranking_group = hp.ranking_group
-        model.training_logs = {"train_loss": train_losses,
-                               "valid_loss": valid_losses,
-                               "num_trees": forest.n_trees // K,
-                               "growth_engine": engine_used,
-                               "engine_fallback": engine_fallback}
-        if sess is not None:
-            model.training_logs["resilience"] = sess.events
-            model.training_logs["interrupted"] = interrupted
+        model.training_logs = build_training_logs(
+            learner="gbt", num_trees=forest.n_trees // K,
+            growth_engine=engine_used, engine_fallback=engine_fallback,
+            resilience=sess.events if sess is not None else None,
+            interrupted=interrupted,
+            extra={"train_loss": train_losses, "valid_loss": valid_losses})
         return model
 
 

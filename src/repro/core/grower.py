@@ -46,6 +46,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.obs import trace
 from repro.core.api import YdfError
 from repro.core.binning import BinnedFeatures
 from repro.core.hist_backend import (
@@ -296,37 +297,44 @@ def _grow_level_wise_batched(forest, t, binned, X_raw, stats, node_of, params,
                     and backend.exact_subtraction
                     and sp.categorical_algorithm != "RANDOM"
                     and int(n_ex.sum()) > 4 * n_front * B)
-        if hist64_prev is None or not sub_pays:
-            hist64 = backend.build(codes, stats, node_of_c, n_front)
-        else:
-            # -- histogram subtraction across levels: accumulate only the
-            # smaller child of each pair, derive the sibling as parent - child
-            build_slot = np.full(n_front, -1, np.int32)
-            derive = []
-            nb = 0
-            for j in range(n_front):
-                sib = int(sib_of[j])
-                if sib < 0 or n_ex[j] < n_ex[sib] or (
-                        n_ex[j] == n_ex[sib] and j < sib):
-                    build_slot[j] = nb
-                    nb += 1
-                    if sib >= 0:
-                        derive.append(sib)
-            bmap = np.full(forest.max_nodes, -1, np.int32)
-            bmap[np.asarray(frontier)] = build_slot
-            node_of_b = np.where(node_of >= 0, bmap[np.maximum(node_of, 0)], -1)
-            built = backend.build(codes, stats, node_of_b, nb)
-            hist64 = np.empty((n_front, F, B, S), np.float64)
-            built_rows = np.where(build_slot >= 0)[0]
-            hist64[built_rows] = built[build_slot[built_rows]]
-            if derive:
-                der = np.asarray(derive, np.int32)
-                hist64[der] = hist64_prev[par_of[der]] - hist64[sib_of[der]]
-            del hist64_prev
-        hist = hist64.astype(np.float32)
-        mask = _candidate_mask(frontier, t, F, params, rng)
-        splits = _node_best_split(hist, binned, sp, rng, X_raw, stats,
-                                  node_of_c, n_front, num_lo, num_hi, mask)
+        with trace.span("grower/hist_build", level=level, frontier=n_front,
+                        subtraction=bool(sub_pays and hist64_prev is not None)):
+            if hist64_prev is None or not sub_pays:
+                hist64 = backend.build(codes, stats, node_of_c, n_front)
+            else:
+                # -- histogram subtraction across levels: accumulate only the
+                # smaller child of each pair, derive the sibling as
+                # parent - child
+                build_slot = np.full(n_front, -1, np.int32)
+                derive = []
+                nb = 0
+                for j in range(n_front):
+                    sib = int(sib_of[j])
+                    if sib < 0 or n_ex[j] < n_ex[sib] or (
+                            n_ex[j] == n_ex[sib] and j < sib):
+                        build_slot[j] = nb
+                        nb += 1
+                        if sib >= 0:
+                            derive.append(sib)
+                bmap = np.full(forest.max_nodes, -1, np.int32)
+                bmap[np.asarray(frontier)] = build_slot
+                node_of_b = np.where(node_of >= 0,
+                                     bmap[np.maximum(node_of, 0)], -1)
+                built = backend.build(codes, stats, node_of_b, nb)
+                hist64 = np.empty((n_front, F, B, S), np.float64)
+                built_rows = np.where(build_slot >= 0)[0]
+                hist64[built_rows] = built[build_slot[built_rows]]
+                if derive:
+                    der = np.asarray(derive, np.int32)
+                    hist64[der] = (hist64_prev[par_of[der]]
+                                   - hist64[sib_of[der]])
+                del hist64_prev
+            hist = hist64.astype(np.float32)
+        with trace.span("grower/gain_scan", level=level, frontier=n_front):
+            mask = _candidate_mask(frontier, t, F, params, rng)
+            splits = _node_best_split(hist, binned, sp, rng, X_raw, stats,
+                                      node_of_c, n_front, num_lo, num_hi,
+                                      mask)
         # -- allocate children (frontier order, shared node budget)
         left_of = np.full(n_front, -1, np.int32)
         for i, node in enumerate(frontier):
@@ -345,35 +353,39 @@ def _grow_level_wise_batched(forest, t, binned, X_raw, stats, node_of, params,
         # axis-aligned conditions collapse to a per-slot (256,) go-right
         # lookup over bin codes (b >= split_bin for numerical, set membership
         # for categorical); oblique slots fall back to per-slot projection.
-        feat = np.array([s.feature for s in splits], np.int32)
-        table = np.zeros((n_front, 256), bool)
-        obl_slots = []
-        for i in split_slots:
-            s = splits[i]
-            if s.obl_features is not None:
-                obl_slots.append(i)
-            elif s.cat_right is not None:
-                table[i, s.cat_right] = True
-            else:
-                table[i, s.split_bin:] = True
-        ex = np.where((node_of_c >= 0)
-                      & (left_of[np.maximum(node_of_c, 0)] >= 0))[0]
-        sl = node_of_c[ex]
-        go = table[sl, codes[ex, np.maximum(feat[sl], 0)]]
-        for i in obl_slots:
-            m = sl == i
-            go[m] = apply_split(splits[i], binned, X_raw, ex[m])
-        node_of[ex] = left_of[sl] + go
+        with trace.span("grower/routing", level=level,
+                        splits=len(split_slots)):
+            feat = np.array([s.feature for s in splits], np.int32)
+            table = np.zeros((n_front, 256), bool)
+            obl_slots = []
+            for i in split_slots:
+                s = splits[i]
+                if s.obl_features is not None:
+                    obl_slots.append(i)
+                elif s.cat_right is not None:
+                    table[i, s.cat_right] = True
+                else:
+                    table[i, s.split_bin:] = True
+            ex = np.where((node_of_c >= 0)
+                          & (left_of[np.maximum(node_of_c, 0)] >= 0))[0]
+            sl = node_of_c[ex]
+            go = table[sl, codes[ex, np.maximum(feat[sl], 0)]]
+            for i in obl_slots:
+                m = sl == i
+                go[m] = apply_split(splits[i], binned, X_raw, ex[m])
+            node_of[ex] = left_of[sl] + go
         # -- all child leaf stats in one flattened bincount over node_of
-        ci_of = np.full(n_front, -1, np.int64)
-        ci_of[split_slots] = np.arange(len(split_slots))
-        child_code = 2 * ci_of[sl] + go
-        n_child = 2 * len(split_slots)
-        csum = np.bincount(
-            (child_code[:, None] * S + np.arange(S)).ravel(),
-            weights=np.ascontiguousarray(stats[ex], np.float64).ravel(),
-            minlength=n_child * S).reshape(n_child, S)
-        child_n_ex = np.bincount(child_code, minlength=n_child)
+        with trace.span("grower/leaf_stats", level=level,
+                        examples=len(ex)):
+            ci_of = np.full(n_front, -1, np.int64)
+            ci_of[split_slots] = np.arange(len(split_slots))
+            child_code = 2 * ci_of[sl] + go
+            n_child = 2 * len(split_slots)
+            csum = np.bincount(
+                (child_code[:, None] * S + np.arange(S)).ravel(),
+                weights=np.ascontiguousarray(stats[ex], np.float64).ravel(),
+                minlength=n_child * S).reshape(n_child, S)
+            child_n_ex = np.bincount(child_code, minlength=n_child)
         # -- next frontier. A child below 2 * min_examples total weight can
         # never produce a valid split, so it is pruned from the frontier
         # (identical output, skipped work) — but only when the splitter
@@ -433,18 +445,20 @@ def _grow_best_first_batched(forest, t, binned, X_raw, stats, node_of, params,
     oblique = sp.oblique and num_lo is not None
 
     def build(idx: np.ndarray) -> np.ndarray:
-        return backend.build(binned.codes[idx], stats[idx],
-                             np.zeros(len(idx), np.int32), 1)
+        with trace.span("grower/hist_build", examples=len(idx)):
+            return backend.build(binned.codes[idx], stats[idx],
+                                 np.zeros(len(idx), np.int32), 1)
 
     def eval_node(node: int, idx: np.ndarray, hist64: np.ndarray) -> Split:
-        m = _candidate_mask([node], t, F, params, rng)
-        node_of_c = None
-        if oblique:  # oblique projections scan raw columns, not histograms
-            node_of_c = np.full(N, -1, np.int32)
-            node_of_c[idx] = 0
-        return _node_best_split(hist64.astype(np.float32), binned, sp, rng,
-                                X_raw, stats, node_of_c, 1, num_lo, num_hi,
-                                m)[0]
+        with trace.span("grower/gain_scan", node=node):
+            m = _candidate_mask([node], t, F, params, rng)
+            node_of_c = None
+            if oblique:  # oblique projections scan raw columns, not hists
+                node_of_c = np.full(N, -1, np.int32)
+                node_of_c[idx] = 0
+            return _node_best_split(hist64.astype(np.float32), binned, sp,
+                                    rng, X_raw, stats, node_of_c, 1, num_lo,
+                                    num_hi, m)[0]
 
     heap: list = []
     counter = 0
@@ -482,12 +496,14 @@ def _grow_best_first_batched(forest, t, binned, X_raw, stats, node_of, params,
         forest.n_nodes[t] += 2
         _set_split(forest, t, node, s, binned)
         forest.left_child[t, node] = left
-        go = apply_split(s, binned, X_raw, idx)
-        node_of[idx] = np.where(go, left + 1, left)
+        with trace.span("grower/routing", node=node, examples=len(idx)):
+            go = apply_split(s, binned, X_raw, idx)
+            node_of[idx] = np.where(go, left + 1, left)
         depth = max(depth, d + 1)
         child_idx = {left: idx[~go], left + 1: idx[go]}
-        for child, cidx in child_idx.items():
-            forest.leaf_value[t, child] = leaf_fn(stats[cidx].sum(0))
+        with trace.span("grower/leaf_stats", node=node):
+            for child, cidx in child_idx.items():
+                forest.leaf_value[t, child] = leaf_fn(stats[cidx].sum(0))
         want = {c: d + 1 < params.max_depth and len(ci) >= 2 * sp.min_examples
                 for c, ci in child_idx.items()}
         if not any(want.values()):
@@ -577,17 +593,23 @@ def _grow_level_wise_lockstep(forest, ts, binned, stats_list, node_of,
         # -- one flattened bincount over (slot, candidate, bin) buckets; per
         # bucket the accumulation order stays example-ascending within one
         # tree, bit-identical to the per-tree numpy backend
-        flat = ((gslot[:, None] * kf + np.arange(kf)[None]) * B
-                + codes_sel).ravel()
-        uniq, inv = _unique_stat_columns(wstats)
-        strips = [np.bincount(flat, weights=np.repeat(wstats[:, s], kf),
-                              minlength=n_slots * kf * B
-                              ).reshape(n_slots, kf, B) for s in uniq]
-        hist = np.empty((n_slots, kf, B, S), np.float32)
-        for s in range(S):
-            hist[..., s] = strips[inv[s]]
-        splits = best_splits_gathered(hist, feat_sel, binned, sp)
+        with trace.span("grower/hist_build", level=level, lockstep=K,
+                        frontier=n_slots):
+            flat = ((gslot[:, None] * kf + np.arange(kf)[None]) * B
+                    + codes_sel).ravel()
+            uniq, inv = _unique_stat_columns(wstats)
+            strips = [np.bincount(flat, weights=np.repeat(wstats[:, s], kf),
+                                  minlength=n_slots * kf * B
+                                  ).reshape(n_slots, kf, B) for s in uniq]
+            hist = np.empty((n_slots, kf, B, S), np.float32)
+            for s in range(S):
+                hist[..., s] = strips[inv[s]]
+        with trace.span("grower/gain_scan", level=level, lockstep=K,
+                        frontier=n_slots):
+            splits = best_splits_gathered(hist, feat_sel, binned, sp)
         # -- per tree: allocate children, route, child stats, prune
+        _route_ctx = trace.span("grower/routing", level=level, lockstep=K)
+        _route_ctx.__enter__()
         for k in range(K):
             n_k = n_slots_k[k]
             if not n_k:
@@ -639,6 +661,7 @@ def _grow_level_wise_lockstep(forest, ts, binned, stats_list, node_of,
                 if keep[2 * ci + 1]:
                     nf.append(left + 1)
             frontiers[k] = nf
+        _route_ctx.__exit__(None, None, None)
     for d in depths:
         forest.depth = max(forest.depth, d)
 

@@ -37,6 +37,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs import trace
 from repro.core.api import YdfError
 from repro.core.binning import BinnedFeatures
 from repro.core.sampling import keyed_feature_select_jnp, sample_size
@@ -45,6 +46,11 @@ from repro.core.tree import MASK_WORDS, Forest
 
 _B = 256          # bin axis (uint8 codes)
 _W_CAP = 512      # per-chunk slot width inside the level step
+
+# (cfg, K, N, P) shape buckets whose level step has already been jitted in
+# this process — lets tracing label the first call at a bucket as compile
+# time and the rest as execute time (DESIGN.md §13.2).
+_stepped_shapes: set = set()
 
 
 def device_unsupported_reason(params, binned: BinnedFeatures | None = None,
@@ -350,6 +356,7 @@ def grow_trees_device(forest: Forest, ts, binned: BinnedFeatures,
     """Grow trees ``ts`` of ``forest`` in device-resident lockstep. The block
     is padded to ``block`` trees so every block reuses one compiled program.
     Returns the final ``node_of`` routing, (len(ts), N) int32."""
+    import jax
     import jax.numpy as jnp
 
     sp = params.splitter
@@ -397,24 +404,44 @@ def grow_trees_device(forest: Forest, ts, binned: BinnedFeatures,
     depth = jnp.zeros((K,), jnp.int32)
 
     for _level in range(params.max_depth):
+        # Tracing splits compile time from execute time per (cfg, shape
+        # bucket): the first call at a new frontier bucket pays the jit
+        # trace+compile, later calls replay the cached executable. The
+        # block_until_ready sync only happens while a tracer is active —
+        # the untraced path keeps the async dispatch pipeline intact.
+        if trace.enabled():
+            shape_key = (cfg, K, N, int(slot_node.shape[1]))
+            first = shape_key not in _stepped_shapes
+            _stepped_shapes.add(shape_key)
+            with trace.span("grower_device/level_step", level=_level,
+                            P=int(slot_node.shape[1]), compile=first):
+                out = step(
+                    codes, nbins, iscat, stats, tree_ids, slot_of,
+                    slot_node, feat_a, sbin_a, catm_a, left_a, gain_a,
+                    lstats_a, nn, node_of, depth)
+                jax.block_until_ready(out)
+        else:
+            out = step(
+                codes, nbins, iscat, stats, tree_ids, slot_of, slot_node,
+                feat_a, sbin_a, catm_a, left_a, gain_a, lstats_a, nn,
+                node_of, depth)
         (slot_of, slot_node, feat_a, sbin_a, catm_a, left_a, gain_a,
-         lstats_a, nn, node_of, depth, nv) = step(
-            codes, nbins, iscat, stats, tree_ids, slot_of, slot_node,
-            feat_a, sbin_a, catm_a, left_a, gain_a, lstats_a, nn, node_of,
-            depth)
+         lstats_a, nn, node_of, depth, nv) = out
         # the single per-level host sync: the compacted frontier width,
         # used to choose the next power-of-two shape bucket
-        nv_max = int(nv.max())
+        with trace.span("grower_device/host_sync", level=_level):
+            nv_max = int(nv.max())
         if nv_max == 0:
             break
         P_next = _next_pow2(2 * nv_max)
         slot_node = slot_node[:, :P_next]
 
     # one fetch per block: decode device arrays into the host Forest
-    (feat_h, sbin_h, catm_h, left_h, gain_h, lstats_h, nn_h, node_h,
-     depth_h) = (np.asarray(a) for a in
-                 (feat_a, sbin_a, catm_a, left_a, gain_a, lstats_a, nn,
-                  node_of, depth))
+    with trace.span("grower_device/fetch", trees=Kr):
+        (feat_h, sbin_h, catm_h, left_h, gain_h, lstats_h, nn_h, node_h,
+         depth_h) = tuple(np.asarray(a) for a in
+                          (feat_a, sbin_a, catm_a, left_a, gain_a, lstats_a,
+                           nn, node_of, depth))
     for b, t in enumerate(ts):
         n_t = int(nn_h[b])
         forest.n_nodes[t] = n_t

@@ -11,6 +11,7 @@ from typing import Any
 
 import numpy as np
 
+from repro.obs import trace
 from repro.core.api import Model, Task, YdfError
 from repro.core.binning import BinnedFeatures, bin_features
 from repro.core.dataspec import (
@@ -148,7 +149,8 @@ def prepare_train_data(learner, dataset, *, features: list[str] | None = None,
                 raise YdfError(
                     f'{task_name} label "{label}" contains missing values.')
         classes, n_classes = None, 0
-    binned = bin_features(ds, feats, max_bins=max_bins)
+    with trace.span("grower/binning", rows=ds.n_rows, features=len(feats)):
+        binned = bin_features(ds, feats, max_bins=max_bins)
     X_raw = raw_matrix(ds, feats)
     num_cols = np.where(~binned.is_cat)[0]
     if len(num_cols) and ds.n_rows:
@@ -261,12 +263,16 @@ class DecisionForestModel(Model):
                          + ", ".join(f"{k}={v:.4g}" for k, v in
                                      self.self_evaluation.metrics.items()
                                      if isinstance(v, float)))
-        oob = getattr(self, "training_logs", {}).get("oob") \
-            if isinstance(getattr(self, "training_logs", None), dict) else None
-        if oob:
-            lines.append(
-                f"Out-of-bag coverage: {oob['coverage']:.1%} of training "
-                f"examples ({oob['mean_trees_per_example']:.1f} trees/example)")
+        logs = getattr(self, "training_logs", None)
+        if isinstance(logs, dict):
+            from repro.obs import summarize_training_logs
+            lines.extend(summarize_training_logs(logs))
+            oob = logs.get("oob")
+            if oob:
+                lines.append(
+                    f"Out-of-bag coverage: {oob['coverage']:.1%} of training "
+                    f"examples "
+                    f"({oob['mean_trees_per_example']:.1f} trees/example)")
         if verbose:
             insp = self.inspect()
             st = insp.stats_summary()

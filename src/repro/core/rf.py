@@ -12,6 +12,7 @@ from repro.core.api import Learner, Task, YdfError, register_learner
 from repro.core.evaluation import evaluate_predictions
 from repro.core.grower import GrowthParams, grow_trees, resolve_engine
 from repro.core.hparams import RFHparams
+from repro.obs import build_training_logs, trace
 from repro.core.models import RandomForestModel, prepare_train_data
 from repro.core.splitters import SplitterParams
 from repro.core.tree import empty_forest, predict_raw
@@ -133,10 +134,12 @@ class RandomForestLearner(Learner):
                         counts = np.ones(N)
                     counts_b.append(counts)
                     stats_b.append(base_stats * counts[:, None])
-                grow_trees(forest, ts, td.binned, td.X_raw, stats_b,
-                           [c > 0 for c in counts_b], leaf_fn, gp,
-                           [tree_rng[t] for t in ts], td.num_lo, td.num_hi,
-                           block=block)
+                with trace.span("rf/block", first_tree=ts[0],
+                                trees=len(ts)):
+                    grow_trees(forest, ts, td.binned, td.X_raw, stats_b,
+                               [c > 0 for c in counts_b], leaf_fn, gp,
+                               [tree_rng[t] for t in ts], td.num_lo,
+                               td.num_hi, block=block)
                 if hp.compute_oob and hp.bootstrap:
                     from repro.core.gbt import _one_tree
                     for bi, t in enumerate(ts):
@@ -180,16 +183,11 @@ class RandomForestLearner(Learner):
             winner_take_all=hp.winner_take_all, forest=forest, spec=td.ds.spec,
             features=td.features, label=self.label, task=self.task,
             classes=td.classes, self_evaluation=self_eval)
-        model.training_logs = {"growth_engine": engine_used,
-                               "engine_fallback": fallback,
-                               "tree_parallelism": block}
-        if sess is not None:
-            model.training_logs["resilience"] = sess.events
-            model.training_logs["interrupted"] = interrupted
+        oob_logs = None
         if self_eval is not None:
             # surface the OOB result (it was previously reachable only via
             # self_evaluation) and the per-example coverage
-            model.training_logs["oob"] = {
+            oob_logs = {
                 "source": self_eval.source,
                 "n_examples": self_eval.n_examples,
                 "metrics": {k: float(v) for k, v in self_eval.metrics.items()
@@ -197,6 +195,12 @@ class RandomForestLearner(Learner):
                 "coverage": float((oob_cnt > 0).mean()),
                 "mean_trees_per_example": float(oob_cnt.mean()),
             }
+        model.training_logs = build_training_logs(
+            learner="rf", num_trees=forest.n_trees,
+            growth_engine=engine_used, engine_fallback=fallback,
+            resilience=sess.events if sess is not None else None,
+            interrupted=interrupted,
+            extra={"tree_parallelism": block, "oob": oob_logs})
         if hp.compute_oob and hp.bootstrap:
             # everything needed to REGENERATE the per-tree bootstrap bags
             # post-hoc (the multinomial draw is the first consumption of each

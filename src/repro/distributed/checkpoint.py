@@ -21,7 +21,7 @@ import os
 import pickle
 import shutil
 import threading
-import time
+from repro.obs import clock
 from typing import Any
 
 import jax
@@ -74,7 +74,7 @@ class CheckpointManager:
         with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
             pickle.dump(treedef, f)
         manifest = {"step": step, "names": [n for n, _ in named],
-                    "time": time.time(), "extra": extra}
+                    "time": clock.wall(), "extra": extra}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):

@@ -20,7 +20,7 @@ import argparse
 import json
 import subprocess
 import sys
-import time
+from repro.obs import clock
 import traceback
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
@@ -57,7 +57,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str, out_path: str | No
     if rules_overrides:
         rules.update(rules_overrides)
 
-    t0 = time.time()
+    t0 = clock.wall()
     if shape.kind == "train":
         bundle = make_train_step(cfg, shape, mesh, rules)
         arg_specs = (bundle.state_specs, lm.batch_spec(cfg, shape))
@@ -78,9 +78,9 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str, out_path: str | No
         jf = jax.jit(b.fn, in_shardings=arg_sh, donate_argnums=(2,))
 
     lowered = jf.lower(*arg_specs)
-    t_lower = time.time() - t0
+    t_lower = clock.wall() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = clock.wall() - t0 - t_lower
 
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):
@@ -177,7 +177,7 @@ def driver(mesh_kinds, skip_done: bool, overrides=(), suffix: str = "") -> int:
         out = _cell_path(arch, shape, mk, suffix)
         if skip_done and os.path.exists(out):
             continue
-        t0 = time.time()
+        t0 = clock.wall()
         cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
                "--shape", shape, "--mesh", mk, "--out", out]
         for ov in overrides:
@@ -186,7 +186,7 @@ def driver(mesh_kinds, skip_done: bool, overrides=(), suffix: str = "") -> int:
             cmd, capture_output=True, text=True,
             env=dict(os.environ, PYTHONPATH=os.environ.get("PYTHONPATH", "src")),
         )
-        dt = time.time() - t0
+        dt = clock.wall() - t0
         status = "ok" if r.returncode == 0 else "FAIL"
         print(f"[{i + 1}/{len(cells)}] {arch} x {shape} x {mk}: {status} ({dt:.0f}s)",
               flush=True)

@@ -5,7 +5,7 @@ reporting tokens/s. CPU-sized with --smoke; production shardings via --mesh
 from __future__ import annotations
 
 import argparse
-import time
+from repro.obs import clock
 
 
 def main():
@@ -34,9 +34,9 @@ def main():
     params = init_params(jax.random.key(0), lm.model_schema(cfg), cfg.param_dtype)
     batch = lm.make_batch(jax.random.key(1), cfg, shape)
 
-    t0 = time.time()
+    t0 = clock.wall()
     toks = greedy_generate(params, batch, cfg, args.gen)
-    dt = time.time() - t0
+    dt = clock.wall() - t0
     n_tok = toks.shape[0] * toks.shape[1]
     print(f"{args.arch}: generated {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s incl. compile)")

@@ -1,0 +1,26 @@
+"""The repo's sanctioned timing sources.
+
+Every wall/monotonic/perf timestamp taken inside ``src/`` flows through
+this module (or through an injected clock such as §9.3's ``FakeClock``).
+``tests/test_no_stray_timers.py`` enforces this statically: a new
+``time.perf_counter()`` / ``time.time()`` call site anywhere else in
+``src/`` fails the suite.  The point is that timing is observability —
+if a phase is worth timing it is worth a span (`obs.trace`) or a metric
+(`obs.metrics`), and ad-hoc timers scattered through the codebase are
+how the pre-§13 survivorship bugs happened.
+
+Use:
+
+    from repro.obs import clock
+    t0 = clock.perf()      # high-resolution interval timing
+    ts = clock.wall()      # epoch seconds (file names, logs)
+    tm = clock.monotonic() # deadlines / cadence (injectable default)
+"""
+from __future__ import annotations
+
+import time
+
+# Aliases, not wrappers: zero call overhead vs. the raw stdlib functions.
+perf = time.perf_counter
+wall = time.time
+monotonic = time.monotonic

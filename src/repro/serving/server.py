@@ -42,12 +42,13 @@ from __future__ import annotations
 import asyncio
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Mapping
 
 import numpy as np
 
 from repro.core.api import EngineFailure, YdfError
+from repro.obs.metrics import MetricsRegistry
 from repro.serving.forest import DEFAULT_BUCKETS, ForestServeBundle
 
 
@@ -139,64 +140,112 @@ class CircuitBreaker:
 
 # ------------------------------------------------------------------ metrics
 
-@dataclass
-class ServerMetrics:
-    """Serving counters + latency reservoir (§9.4). ``to_dict`` is the
-    machine surface (benchmarks, CLI --json); ``summary`` the human one."""
-    submitted: int = 0
-    accepted: int = 0
-    shed: int = 0
-    timed_out: int = 0
-    completed: int = 0
-    failed: int = 0
-    retries: int = 0
-    fallback_dispatches: int = 0
-    poisoned_rejected: int = 0
-    circuit_opens: int = 0
-    circuit_closes: int = 0
-    dispatches: int = 0
-    rows_dispatched: int = 0
-    rows_padded: int = 0
-    engine_dispatches: dict = field(default_factory=dict)
-    padding_by_bucket: dict = field(default_factory=dict)
-    max_latency_samples: int = 65536
-    _latencies: list = field(default_factory=list)
+# scalar counters exposed as plain attributes (call sites use `+=`); each
+# is one unlabeled Counter series in the backing registry
+_COUNTER_FIELDS = ("submitted", "accepted", "shed", "timed_out", "completed",
+                   "failed", "retries", "fallback_dispatches",
+                   "poisoned_rejected", "circuit_opens", "circuit_closes",
+                   "dispatches", "rows_dispatched", "rows_padded")
 
-    def observe_latency(self, seconds: float) -> None:
-        if len(self._latencies) >= self.max_latency_samples:
-            # bounded reservoir: drop the oldest half in one amortized move
-            self._latencies = self._latencies[self.max_latency_samples // 2:]
-        self._latencies.append(float(seconds))
+# latency series outcomes (§13.4 survivorship fix): pre-§13 only COMPLETED
+# requests entered the reservoir, so p50/p99 under overload silently
+# excluded every shed and timed-out request — exactly the requests that
+# make overload painful. Each outcome is its own labeled series now.
+LATENCY_OUTCOMES = ("completed", "timed_out", "shed")
+
+
+class ServerMetrics:
+    """Serving counters + latency reservoirs (§9.4), a facade over one
+    ``obs.metrics.MetricsRegistry`` (§13.4 — same schema as every other
+    metric in the system). ``to_dict`` is the machine surface (benchmarks,
+    CLI --json) and keeps its pre-§13 keys; ``summary`` the human one.
+
+    Latency is a labeled histogram series ``latency_s{outcome=...}``:
+    ``completed`` feeds the headline p50/p99 (unchanged semantics),
+    ``timed_out`` records the sojourn time of requests that missed their
+    deadline, ``shed`` the estimated-completion time that triggered
+    admission shedding — so overload is measured, not censored.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None,
+                 max_latency_samples: int = 65536) -> None:
+        object.__setattr__(self, "registry", registry or MetricsRegistry())
+        object.__setattr__(self, "max_latency_samples",
+                           int(max_latency_samples))
+        for name in _COUNTER_FIELDS:
+            self.registry.counter(name)
+        for oc in LATENCY_OUTCOMES:
+            self.registry.histogram("latency_s", outcome=oc)
+
+    # counter attributes proxy to registry series so `metrics.shed += 1`
+    # call sites stay untouched while the data lives in one schema
+    def __getattr__(self, name: str):
+        if name in _COUNTER_FIELDS:
+            return self.__dict__["registry"].counter(name).value
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value) -> None:
+        if name in _COUNTER_FIELDS:
+            self.__dict__["registry"].counter(name).value = int(value)
+        else:
+            object.__setattr__(self, name, value)
+
+    @property
+    def engine_dispatches(self) -> dict:
+        return {k: int(v) for k, v in self.registry.labeled_values(
+            "engine_dispatches", "engine").items()}
+
+    @property
+    def padding_by_bucket(self) -> dict:
+        out: dict = {}
+        for b, v in self.registry.labeled_values(
+                "bucket_dispatches", "bucket").items():
+            out[int(b)] = {"dispatches": int(v), "pad_rows": 0}
+        for b, v in self.registry.labeled_values(
+                "bucket_pad_rows", "bucket").items():
+            out.setdefault(int(b), {"dispatches": 0, "pad_rows": 0})[
+                "pad_rows"] = int(v)
+        return out
+
+    @property
+    def _latencies(self) -> list:
+        # legacy view: the completed-outcome reservoir (soak tests, §9.4)
+        return self.registry.histogram("latency_s",
+                                       outcome="completed").values
+
+    def observe_latency(self, seconds: float,
+                        outcome: str = "completed") -> None:
+        h = self.registry.histogram("latency_s", outcome=outcome)
+        h.cap = self.max_latency_samples
+        h.observe(float(seconds))
 
     def observe_dispatch(self, engine: str, rows: int, padded: int) -> None:
         self.dispatches += 1
         self.rows_dispatched += rows
         self.rows_padded += padded - rows
-        self.engine_dispatches[engine] = \
-            self.engine_dispatches.get(engine, 0) + 1
-        b = self.padding_by_bucket.setdefault(
-            int(padded), {"dispatches": 0, "pad_rows": 0})
-        b["dispatches"] += 1
-        b["pad_rows"] += padded - rows
+        self.registry.counter("engine_dispatches", engine=engine).inc()
+        self.registry.counter("bucket_dispatches", bucket=int(padded)).inc()
+        self.registry.counter("bucket_pad_rows",
+                              bucket=int(padded)).inc(padded - rows)
 
-    def latency_percentiles(self) -> dict:
-        if not self._latencies:
+    def latency_percentiles(self, outcome: str = "completed") -> dict:
+        vals = self.registry.histogram("latency_s", outcome=outcome).values
+        if not vals:
             return {"p50_ms": None, "p99_ms": None, "n": 0}
-        lat = np.asarray(self._latencies)
+        lat = np.asarray(vals)
         return {"p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 4),
                 "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 4),
                 "n": len(lat)}
 
     def to_dict(self) -> dict:
-        out = {k: getattr(self, k) for k in (
-            "submitted", "accepted", "shed", "timed_out", "completed",
-            "failed", "retries", "fallback_dispatches", "poisoned_rejected",
-            "circuit_opens", "circuit_closes", "dispatches",
-            "rows_dispatched", "rows_padded")}
+        out = {k: getattr(self, k) for k in _COUNTER_FIELDS}
         out["engine_dispatches"] = dict(self.engine_dispatches)
         out["padding_by_bucket"] = {str(k): dict(v) for k, v in
                                     sorted(self.padding_by_bucket.items())}
         out["latency"] = self.latency_percentiles()
+        out["latency_by_outcome"] = {
+            oc: self.latency_percentiles(outcome=oc)
+            for oc in LATENCY_OUTCOMES}
         return out
 
     def summary(self) -> str:
@@ -219,7 +268,14 @@ class ServerMetrics:
         ]
         if lat["n"]:
             lines.append(f"  latency  : p50={lat['p50_ms']:.3f} ms "
-                         f"p99={lat['p99_ms']:.3f} ms over {lat['n']} requests")
+                         f"p99={lat['p99_ms']:.3f} ms over {lat['n']} "
+                         "completed requests")
+        for oc in ("timed_out", "shed"):
+            ol = self.latency_percentiles(outcome=oc)
+            if ol["n"]:
+                lines.append(f"  latency  : [{oc}] p50={ol['p50_ms']:.3f} ms "
+                             f"p99={ol['p99_ms']:.3f} ms over {ol['n']} "
+                             "requests (excluded from headline percentiles)")
         for b, s in sorted(self.padding_by_bucket.items()):
             total = s["dispatches"] * b
             waste = s["pad_rows"] / total if total else 0.0
@@ -431,6 +487,8 @@ class ForestServer:
         queued = st.pending_rows()
         if queued + len(X) > self.max_queue_rows:
             self.metrics.shed += 1
+            est = self._estimate_service_s(st, queued + len(X))
+            self.metrics.observe_latency(est or 0.0, outcome="shed")
             raise RequestShed(
                 f"queue full for model {st.name!r}: {queued} rows pending, "
                 f"request adds {len(X)} (max_queue_rows={self.max_queue_rows})."
@@ -439,6 +497,7 @@ class ForestServer:
             est = self._estimate_service_s(st, queued + len(X))
             if est is not None and est > deadline_s:
                 self.metrics.shed += 1
+                self.metrics.observe_latency(est, outcome="shed")
                 raise RequestShed(
                     f"deadline {deadline_s * 1e3:.2f} ms cannot be met for "
                     f"model {st.name!r}: {queued} rows queued ahead, "
@@ -546,6 +605,8 @@ class ForestServer:
             for r in reqs:
                 if r.deadline is not None and now > r.deadline:
                     self.metrics.timed_out += 1
+                    self.metrics.observe_latency(now - r.t_submit,
+                                                 outcome="timed_out")
                     self._resolve(r, error=RequestTimedOut(
                         f"deadline expired while queued "
                         f"({(now - r.t_submit) * 1e3:.2f} ms since submit)"))
@@ -569,6 +630,8 @@ class ForestServer:
                 end = row + len(r.X)
                 if r.deadline is not None and t_done > r.deadline:
                     self.metrics.timed_out += 1
+                    self.metrics.observe_latency(t_done - r.t_submit,
+                                                 outcome="timed_out")
                     self._resolve(r, error=RequestTimedOut(
                         f"deadline expired during dispatch "
                         f"({(t_done - r.t_submit) * 1e3:.2f} ms since "

@@ -20,6 +20,7 @@ import math
 
 import numpy as np
 
+from repro.obs import build_training_logs
 from repro.core.api import Learner, Task, YdfError, register_learner
 from repro.core.hparams import IsolationForestHparams
 from repro.core.models import IsolationForestModel, _as_vertical, raw_matrix
@@ -109,5 +110,7 @@ class IsolationForestLearner(Learner):
         model = IsolationForestModel(
             c_psi=average_path_length(psi), forest=forest, spec=ds.spec,
             features=feats, label=self.label, task=self.task, classes=None)
-        model.training_logs = {"psi": psi, "depth_cap": depth_cap}
+        model.training_logs = build_training_logs(
+            learner="isolation", num_trees=forest.n_trees,
+            extra={"psi": psi, "depth_cap": depth_cap})
         return model

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import build_training_logs
 from repro.core.api import Learner, Task, YdfError, register_learner
 from repro.core.grower import GrowthParams, grow_trees, resolve_engine
 from repro.core.hparams import UpliftHparams
@@ -92,7 +93,8 @@ class UpliftTreesLearner(Learner):
             treatment_col=getattr(hp, "treatment", "treatment"),
             forest=forest, spec=td.ds.spec, features=td.features,
             label=self.label, task=self.task, classes=None)
-        model.training_logs = {"growth_engine": engine_used,
-                               "engine_fallback": fallback,
-                               "tree_parallelism": block}
+        model.training_logs = build_training_logs(
+            learner="uplift", num_trees=forest.n_trees,
+            growth_engine=engine_used, engine_fallback=fallback,
+            extra={"tree_parallelism": block})
         return model

@@ -58,6 +58,7 @@ from typing import Any, Callable
 
 import numpy as np
 
+from repro.obs import trace
 from repro.core.api import YdfError
 
 CHECKPOINT_FORMAT_VERSION = 1
@@ -373,8 +374,10 @@ class CheckpointSession:
         checkpoint must never silently continue onto the wrong dataset or
         under different hyper-parameters.
         """
-        payload, manifest, rolled_back = latest_checkpoint(
-            self.policy.directory)
+        t0 = self.policy.clock()
+        with trace.span("checkpoint/restore", directory=self.policy.directory):
+            payload, manifest, rolled_back = latest_checkpoint(
+                self.policy.directory)
         # quarantines newer than the loaded checkpoint count as rollbacks
         # even when an earlier reader (resume_training's manifest pre-read)
         # did the renaming before this session opened
@@ -417,7 +420,8 @@ class CheckpointSession:
         self.last_saved = manifest["trees_done"]
         self.events.append({"event": "resume",
                             "trees_done": manifest["trees_done"],
-                            "done": manifest["done"]})
+                            "done": manifest["done"],
+                            "restore_s": self.policy.clock() - t0})
         return payload
 
     def save(self, trees_done: int, payload: dict, *, done: bool = False,
@@ -436,14 +440,17 @@ class CheckpointSession:
                     and self.policy.clock() - self._last_save_time >= es)
         if not (force or due_trees or due_time):
             return False
-        write_checkpoint(self.policy.directory, trees_done, payload,
-                         config=self.config, fingerprint=self.fingerprint,
-                         done=done, policy=self.policy,
-                         keep_last=self.policy.keep_last)
+        t0 = self.policy.clock()
+        with trace.span("checkpoint/save", trees_done=trees_done, done=done):
+            write_checkpoint(self.policy.directory, trees_done, payload,
+                             config=self.config, fingerprint=self.fingerprint,
+                             done=done, policy=self.policy,
+                             keep_last=self.policy.keep_last)
         self.last_saved = trees_done
         self._last_save_time = self.policy.clock()
         self.events.append({"event": "checkpoint", "trees_done": trees_done,
-                            "done": done})
+                            "done": done,
+                            "save_s": self._last_save_time - t0})
         return True
 
 

@@ -9,7 +9,7 @@ logical name with resharding.
 """
 from __future__ import annotations
 
-import time
+from repro.obs import clock
 from dataclasses import dataclass
 
 import jax
@@ -52,7 +52,7 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, ckpt_dir: str,
         state, _ = mgr.restore(start, shardings=state_sh)
         log(f"resumed from step {start}")
 
-    t0 = time.time()
+    t0 = clock.wall()
     losses = []
     step = start
     preempted = False
@@ -65,13 +65,13 @@ def train_loop(cfg: ModelConfig, shape: ShapeConfig, ckpt_dir: str,
             losses.append((step + 1, loss))
             log(f"step {step + 1}: loss={loss:.4f} "
                 f"gnorm={float(metrics['grad_norm']):.3f} "
-                f"({(time.time() - t0):.1f}s)")
+                f"({(clock.wall() - t0):.1f}s)")
         if (step + 1) % loop.ckpt_every == 0:
             if loop.async_ckpt:
                 mgr.save_async(step + 1, state)
             else:
                 mgr.save(step + 1, state)
-        if loop.deadline_s and time.time() - t0 > loop.deadline_s:
+        if loop.deadline_s and clock.wall() - t0 > loop.deadline_s:
             preempted = True
             log(f"deadline hit at step {step + 1}; checkpoint + clean exit "
                 "(restart resumes here)")

@@ -1,0 +1,44 @@
+"""Static policy check: all timing goes through ``repro.obs.clock``.
+
+DESIGN.md §13.1: ad-hoc ``time.perf_counter()`` / ``time.time()`` call
+sites are how profiling code rots — they cannot be faked in tests, and
+their measurements never reach the tracer or the metrics registry. The
+only sanctioned source of wall/perf time inside ``src/`` is
+``repro.obs.clock`` (which owns the aliases) plus ``serving/faults.py``
+(whose FakeClock/fault harness is itself a clock implementation).
+
+``time.monotonic``/``time.sleep`` are NOT banned: monotonic deadlines and
+actual sleeping are scheduling concerns, not measurements.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+import pytest
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+# files allowed to touch the raw timers
+ALLOWED = {
+    "repro/obs/clock.py",       # the sanctioned aliases themselves
+    "repro/serving/faults.py",  # clock implementations for fault injection
+}
+
+BANNED = re.compile(r"\btime\.(?:perf_counter|time)\s*\(")
+
+
+@pytest.mark.obs
+def test_no_stray_timers():
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        rel = path.relative_to(SRC).as_posix()
+        if rel in ALLOWED:
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if BANNED.search(line):
+                offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "raw time.perf_counter()/time.time() call sites found — use "
+        "repro.obs.clock (perf/wall) so timing stays fakeable and "
+        "observable:\n" + "\n".join(offenders))

@@ -1,0 +1,351 @@
+"""Observability layer (DESIGN.md §13): tracer, metrics registry,
+exporters, training_logs schema — plus the disabled-path overhead gate.
+
+Span-tree tests run on ``serving.faults.FakeClock`` (§9.3 pattern):
+every duration below is exact, no wall clock involved.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.api import YdfError
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace
+from repro.obs.export import (chrome_trace, phase_summary, profile_dict,
+                              validate_chrome_trace)
+from repro.obs.logs import (REQUIRED_KEYS, build_training_logs,
+                            summarize_training_logs, validate_training_logs)
+from repro.serving.faults import FakeClock
+
+pytestmark = pytest.mark.obs
+
+
+# ------------------------------------------------------------------ tracer
+
+def test_span_nesting_fake_clock():
+    ck = FakeClock()
+    with trace.capture(clock=ck.now) as tr:
+        with trace.span("train/outer", trees=3):
+            ck.advance(1.0)
+            with trace.span("grower/inner"):
+                ck.advance(0.25)
+            ck.advance(0.5)
+    assert len(tr.roots) == 1
+    outer = tr.roots[0]
+    assert outer.name == "train/outer"
+    assert outer.args == {"trees": 3}
+    assert outer.duration == pytest.approx(1.75)
+    (inner,) = outer.children
+    assert inner.name == "grower/inner"
+    assert inner.t0 == pytest.approx(1.0)
+    assert inner.duration == pytest.approx(0.25)
+    assert tr.span_count() == 2
+    assert tr.phase_names() == ["train/outer", "grower/inner"]
+
+
+def test_span_exception_unwinding():
+    ck = FakeClock()
+    with trace.capture(clock=ck.now) as tr:
+        with pytest.raises(RuntimeError):
+            with trace.span("a"):
+                ck.advance(1.0)
+                with trace.span("b"):
+                    ck.advance(1.0)
+                    raise RuntimeError("boom")
+    a = tr.roots[0]
+    (b,) = a.children
+    # both spans closed despite the exception, and the failing one is tagged
+    assert b.args["error"] == "RuntimeError"
+    assert a.args["error"] == "RuntimeError"
+    assert a.t1 == b.t1 == pytest.approx(2.0)
+    # the thread-local stack fully unwound: a new span is a fresh root
+    with trace.capture(clock=ck.now) as tr2:
+        with trace.span("c"):
+            pass
+    assert [r.name for r in tr2.roots] == ["c"]
+
+
+def test_span_thread_isolation():
+    ck = FakeClock()
+    with trace.capture(clock=ck.now) as tr:
+        def work(i: int):
+            with trace.span("worker/block", i=i):
+                with trace.span("worker/sub", i=i):
+                    pass
+        threads = [threading.Thread(target=work, args=(i,), name=f"w{i}")
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        with trace.span("main/own"):
+            pass
+    # each thread produced ITS OWN well-nested root; nothing leaked across
+    assert len(tr.roots) == 5
+    by_tid = {}
+    for r in tr.roots:
+        by_tid.setdefault(r.tid, []).append(r)
+    for tid, roots in by_tid.items():
+        if tid.startswith("w"):
+            (r,) = roots
+            assert r.name == "worker/block"
+            assert [c.name for c in r.children] == ["worker/sub"]
+            assert r.args["i"] == r.children[0].args["i"] == int(tid[1:])
+
+
+def test_capture_nests_and_restores():
+    ck = FakeClock()
+    assert not trace.enabled()
+    with trace.capture(clock=ck.now) as outer:
+        with trace.span("outer/span"):
+            with trace.capture(clock=ck.now) as inner:
+                with trace.span("inner/span"):
+                    pass
+            assert trace.active() is outer
+        assert [r.name for r in inner.roots] == ["inner/span"]
+    assert not trace.enabled()
+    assert [r.name for r in outer.roots] == ["outer/span"]
+    # inner capture saw only its own spans
+    assert all(s.name != "inner/span"
+               for r in outer.roots for s in r.walk())
+
+
+def test_events_and_disabled_noop():
+    ck = FakeClock()
+    with trace.capture(clock=ck.now) as tr:
+        ck.advance(2.0)
+        trace.event("distributed/worker_death", worker=3)
+    assert tr.events[0]["name"] == "distributed/worker_death"
+    assert tr.events[0]["ts"] == pytest.approx(2.0)
+    assert tr.events[0]["args"] == {"worker": 3}
+    # disabled: span() returns the shared no-op singleton, event() drops
+    assert trace.span("x") is trace.span("y")
+    trace.event("ignored")
+
+
+# --------------------------------------------------------------- exporters
+
+def _sample_tracer():
+    ck = FakeClock()
+    with trace.capture(clock=ck.now) as tr:
+        with trace.span("gbt/tree", tree=0):
+            ck.advance(0.5)
+            with trace.span("grower/gain_scan", level=1):
+                ck.advance(0.25)
+        trace.event("checkpoint/rollback", tree=5)
+    return tr
+
+
+def test_chrome_trace_valid_and_normalized():
+    tr = _sample_tracer()
+    doc = chrome_trace(tr)
+    validate_chrome_trace(doc)
+    json.dumps(doc)                          # serializable end to end
+    xs = {e["name"]: e for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert xs["gbt/tree"]["ts"] == 0.0       # normalized to t_origin
+    assert xs["gbt/tree"]["dur"] == pytest.approx(0.75e6)
+    assert xs["grower/gain_scan"]["cat"] == "grower"
+    assert xs["grower/gain_scan"]["ts"] == pytest.approx(0.5e6)
+    insts = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+    assert insts[0]["name"] == "checkpoint/rollback"
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert metas and metas[0]["args"]["name"]     # thread lanes named
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"nope": []})
+
+
+def test_phase_summary_self_time():
+    tr = _sample_tracer()
+    ph = phase_summary(tr)
+    assert ph["gbt/tree"]["count"] == 1
+    assert ph["gbt/tree"]["total_s"] == pytest.approx(0.75)
+    assert ph["gbt/tree"]["self_s"] == pytest.approx(0.5)   # minus child
+    assert ph["grower/gain_scan"]["self_s"] == pytest.approx(0.25)
+    prof = profile_dict(tr)
+    assert prof["schema_version"] == 1
+    assert prof["span_count"] == 2
+    json.dumps(prof)
+
+
+# ---------------------------------------------------------------- metrics
+
+def test_metrics_counters_gauges_histograms():
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("requests").inc()
+    reg.counter("requests").inc(2)
+    assert reg.counter("requests").value == 3
+    reg.counter("requests", engine="pallas").inc(5)
+    assert reg.labeled_values("requests", "engine") == {"pallas": 5}
+    reg.gauge("queue_depth").set(7)
+    assert reg.gauge("queue_depth").value == 7
+    h = reg.histogram("latency_s")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    assert h.count == 4
+    assert h.mean == pytest.approx(2.5)
+    assert h.percentile(50) in (2.0, 3.0)
+
+
+def test_histogram_bounded_reservoir():
+    h = obs_metrics.Histogram(cap=64)
+    for i in range(1000):
+        h.observe(float(i))
+    assert h.count == 1000                   # exact count survives the cap
+    assert h.total == pytest.approx(sum(range(1000)))
+    assert len(h.values) <= 64
+
+
+def test_registry_roundtrip_and_merge():
+    a = obs_metrics.MetricsRegistry()
+    a.counter("trees").inc(3)
+    a.counter("dispatches", engine="numpy").inc(2)
+    a.gauge("depth").set(5)
+    a.histogram("lat", outcome="ok").observe(1.5)
+    d = a.to_dict()
+    assert d["schema_version"] == 1
+    json.dumps(d)
+    b = obs_metrics.MetricsRegistry.from_dict(d)
+    assert b.to_dict() == d                  # lossless round-trip
+    # merge: counters add, gauges last-write, histograms pool
+    c = obs_metrics.MetricsRegistry()
+    c.counter("trees").inc(3)
+    c.gauge("depth").set(9)
+    c.histogram("lat", outcome="ok").observe(2.5)
+    b.merge(c)
+    assert b.counter("trees").value == 6
+    assert b.gauge("depth").value == 9
+    h = b.histogram("lat", outcome="ok")
+    assert h.count == 2 and h.mean == pytest.approx(2.0)
+    assert b.counter("dispatches", engine="numpy").value == 2
+
+
+# ----------------------------------------------------------- training logs
+
+def test_build_training_logs_schema():
+    logs = build_training_logs(learner="gbt", num_trees=10,
+                               growth_engine="batched",
+                               extra={"train_loss": [1.0], "skipme": None})
+    assert all(k in logs for k in REQUIRED_KEYS)
+    assert logs["schema_version"] == 1
+    assert logs["train_loss"] == [1.0]
+    assert "skipme" not in logs
+    assert "profile" not in logs             # tracing was off
+    validate_training_logs(logs)
+    for bad in [{}, {**logs, "schema_version": 99},
+                {**logs, "num_trees": -1},
+                {**logs, "resilience": "nope"}]:
+        with pytest.raises(YdfError):
+            validate_training_logs(bad)
+
+
+def test_training_logs_profile_attached_under_capture():
+    ck = FakeClock()
+    with trace.capture(clock=ck.now):
+        with trace.span("grower/binning"):
+            ck.advance(0.5)
+        logs = build_training_logs(learner="gbt", num_trees=1)
+    assert logs["profile"]["phases"]["grower/binning"]["count"] == 1
+    lines = summarize_training_logs(logs)
+    assert any("learner=gbt" in ln for ln in lines)
+    assert any("profile" in ln for ln in lines)
+    assert summarize_training_logs({"legacy": 1})[0].startswith(
+        "Training logs (legacy)")
+
+
+def test_learners_emit_schema_v1(tiny_adult):
+    from repro.core import (CartLearner, GradientBoostedTreesLearner,
+                            RandomForestLearner)
+    for cls in (GradientBoostedTreesLearner, RandomForestLearner,
+                CartLearner):
+        kw = {"num_trees": 3} if cls is not CartLearner else {}
+        model = cls(label="income", **kw).train(tiny_adult)
+        logs = model.training_logs
+        validate_training_logs(logs)
+        assert logs["learner"] in ("gbt", "rf", "cart")
+        assert any("Training logs (schema v1)" in ln
+                   for ln in model.summary().splitlines())
+
+
+def test_traced_train_covers_grower_phases(tiny_adult):
+    from repro.core import GradientBoostedTreesLearner
+    with trace.capture() as tr:
+        model = GradientBoostedTreesLearner(
+            label="income", num_trees=3).train(tiny_adult)
+    names = set(tr.phase_names())
+    assert {"grower/binning", "grower/hist_build", "grower/gain_scan",
+            "grower/routing", "grower/leaf_stats"} <= names
+    prof = model.training_logs["profile"]
+    assert prof["phases"]["grower/gain_scan"]["count"] > 0
+    validate_chrome_trace(chrome_trace(tr))
+
+
+# ------------------------------------------------------------ CLI profile
+
+def test_cli_profile_train_chrome_trace(tiny_adult, tmp_path, capsys):
+    from repro.cli import main
+    from repro.data.io import write_dataset
+    csv = tmp_path / "train.csv"
+    write_dataset(tiny_adult, f"csv:{csv}")
+    out = tmp_path / "trace.json"
+    main(["profile", "train", f"--dataset=csv:{csv}", "--label=income",
+          f"--trace={out}", "--hparam", "num_trees=3"])
+    doc = json.loads(out.read_text())
+    validate_chrome_trace(doc)
+    grower = {e["name"] for e in doc["traceEvents"]
+              if e["ph"] == "X" and e["name"].startswith("grower/")}
+    assert len(grower) >= 5, grower
+    assert "phase" in capsys.readouterr().out
+
+
+# ------------------------------------------------------- the overhead gate
+
+def test_disabled_tracer_overhead_gate(tiny_adult):
+    """The §13 acceptance gate: with no tracer installed, instrumentation
+    must cost <= 1% of a 50-tree GBT train.
+
+    Measured as (per-disabled-span cost) x (spans such a train emits)
+    against the train's wall time, with the microbenchmark interleaved
+    best-of-reps (the §11 checkpoint-gate protocol) so background load
+    perturbs both sides equally. This scales the gate's sensitivity far
+    beyond timing two trains (whose run-to-run jitter exceeds 1%).
+    """
+    from repro.core import GradientBoostedTreesLearner
+
+    assert not trace.enabled()
+    make = lambda: GradientBoostedTreesLearner(label="income", num_trees=50)
+
+    # span count a 50-tree train emits, counted under a real capture
+    with trace.capture() as tr:
+        make().train(tiny_adult)
+    n_spans = tr.span_count()
+
+    # interleaved best-of: disabled-span loop vs empty loop
+    N = 50_000
+    def spans():
+        for _ in range(N):
+            with trace.span("grower/gain_scan", level=1):
+                pass
+    def baseline():
+        for _ in range(N):
+            pass
+    best = [np.inf, np.inf]
+    for _ in range(5):
+        for i, fn in enumerate((spans, baseline)):
+            t0 = time.perf_counter()
+            fn()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    per_span = max(0.0, best[0] - best[1]) / N
+
+    t0 = time.perf_counter()
+    make().train(tiny_adult)
+    train_s = time.perf_counter() - t0
+
+    overhead = per_span * n_spans / train_s
+    assert overhead <= 0.01, (
+        f"disabled tracer costs {overhead:.2%} of a 50-tree train "
+        f"({per_span * 1e9:.0f} ns/span x {n_spans} spans / {train_s:.2f}s)")
